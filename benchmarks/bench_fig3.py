@@ -1,0 +1,79 @@
+"""Paper Fig. 3: running time (ms) of one assignment's enforcement.
+
+Same sampling protocol as bench_table1 (which also records wall times); this
+module adds the batched-enforcement variant — the beyond-paper lever where B
+candidate assignments are enforced simultaneously by one vmapped fixpoint —
+and reports per-assignment amortized time, plus the dense kernel path timing.
+
+Claims under test (paper §5.3): RTAC per-assignment time is ~flat as n and
+density grow; AC3 time grows. (Absolute numbers are CPU-host numbers in this
+container — the GPU/TPU gap is the point of the roofline analysis instead.)
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CSPBenchSpec, assign, enforce, enforce_batch
+
+
+def run_batched_cell(spec: CSPBenchSpec, batch: int = 16, seed: int = 0) -> dict:
+    csp = spec.build()
+    n, d = csp.dom.shape
+    rng = np.random.default_rng(seed)
+    root = enforce(csp.cons, csp.mask, csp.dom)
+    if not bool(root.consistent):
+        return {"spec": spec, "inconsistent_root": True}
+    root_np = np.asarray(root.dom)
+
+    doms, chs = [], []
+    for _ in range(batch):
+        var = int(rng.integers(n))
+        vals = np.nonzero(root_np[var])[0]
+        val = int(rng.choice(vals))
+        doms.append(np.asarray(assign(jnp.asarray(root_np), var, val)))
+        ch = np.zeros((n,), bool)
+        ch[var] = True
+        chs.append(ch)
+    dom_b = jnp.asarray(np.stack(doms))
+    ch_b = jnp.asarray(np.stack(chs))
+
+    res = enforce_batch(csp.cons, csp.mask, dom_b, ch_b)  # warmup/compile
+    res.dom.block_until_ready()
+    t0 = time.perf_counter()
+    res = enforce_batch(csp.cons, csp.mask, dom_b, ch_b)
+    res.dom.block_until_ready()
+    dt = time.perf_counter() - t0
+    return {
+        "n_vars": spec.n_vars,
+        "density": spec.density,
+        "batched_total_ms": 1e3 * dt,
+        "batched_per_assignment_ms": 1e3 * dt / batch,
+        "batch": batch,
+    }
+
+
+def main(quick: bool = True):
+    ns = (100, 250) if quick else (100, 250, 500, 750, 1000)
+    print("fig3_batched: n_vars,density,batch,per_assignment_ms,total_ms")
+    rows = []
+    for n in ns:
+        for p in (0.10, 0.50, 1.00):
+            spec = CSPBenchSpec(n_vars=n, density=p)
+            r = run_batched_cell(spec, batch=8 if quick else 32)
+            rows.append(r)
+            if "inconsistent_root" in r:
+                continue
+            print(
+                f"fig3_batched,{r['n_vars']},{r['density']:.2f},{r['batch']},"
+                f"{r['batched_per_assignment_ms']:.3f},{r['batched_total_ms']:.3f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,166 @@
+"""Roofline analysis (§g): three terms per (arch × shape × mesh) from the
+dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips x peak)      peak = 197 TFLOP/s bf16 (v5e)
+    memory     = HLO_bytes / (chips x HBM_bw)    HBM  = 819 GB/s
+    collective = wire_bytes / (chips x link_bw)  ICI  = 50 GB/s/link
+
+HLO_FLOPs / HLO_bytes / wire_bytes come from the trip-count-corrected dry-run
+extrapolation and are already PER DEVICE (the SPMD-partitioned module), so no
+further division by chip count is applied. MODEL_FLOPS = 6·N·D (train) or
+2·N·D (prefill/decode), with N = matmul params (active-expert fraction for
+MoE) + the attention term; the MODEL/HLO ratio flags remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def _matmul_params(cfg) -> float:
+    """Matmul-visible params per token (dense + active-expert for MoE)."""
+    from repro.models.model import build_model
+    from repro.models.param import count_params, is_decl
+    import jax
+
+    model = build_model(cfg)
+    decls = model.decls()
+    total = 0.0
+    embed_tok = decls["embed"]["tok"]
+    import numpy as np
+
+    for path, d in jax.tree_util.tree_flatten_with_path(decls, is_leaf=is_decl)[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = float(np.prod(d.shape))
+        if keys[-1] in ("tok", "pos"):
+            continue  # gathers, not matmuls (unembed accounted below)
+        if "moe" in keys and keys[-1] in ("w_up", "w_down", "w_gate"):
+            n *= cfg.top_k / cfg.n_experts  # active fraction per token
+        total += n
+    total += cfg.padded_vocab * cfg.d_model  # unembed matmul (tied or not)
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS per step (standard 6ND / 2ND + attention term)."""
+    n_mat = _matmul_params(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    if shape.kind == "train":
+        tokens = b * s
+        flops = 6.0 * n_mat * tokens
+        if cfg.attention != "none":
+            s_eff = min(s, cfg.window) if cfg.attention == "swa" else s
+            flops += 12.0 * cfg.n_layers * b * s * s_eff * cfg.n_heads * hd * 0.5
+        return flops
+    if shape.kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * n_mat * tokens
+        if cfg.attention != "none":
+            s_eff = min(s, cfg.window) if cfg.attention == "swa" else s
+            flops += 4.0 * cfg.n_layers * b * s * s_eff * cfg.n_heads * hd * 0.5
+        return flops
+    # decode: one token per sequence against a seq_len cache
+    flops = 2.0 * n_mat * b
+    if cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // cfg.attn_every
+    elif cfg.attention != "none":
+        n_attn_layers = cfg.n_layers
+    else:
+        n_attn_layers = 0
+    if n_attn_layers:
+        s_eff = min(s, cfg.window) if cfg.attention == "swa" else s
+        flops += 4.0 * n_attn_layers * b * s_eff * cfg.n_heads * hd
+    return flops
+
+
+def analyze(rec: dict) -> dict:
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    e = rec["cost_extrapolated"]
+    chips = rec["n_devices"]
+    compute_s = e["flops"] / PEAK_FLOPS
+    memory_s = e["bytes"] / HBM_BW
+    collective_s = e["wire_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=lambda k: terms[k])
+    mf = model_flops(cfg, shape)
+    hlo_global = e["flops"] * chips
+    mem = rec.get("memory_analysis", {})
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "roofline_fraction": compute_s / terms[dominant] if terms[dominant] > 0 else 0.0,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global > 0 else 0.0,
+        "temp_gib": mem.get("temp_size_in_bytes", 0) / 2**30,
+        "args_gib": mem.get("argument_size_in_bytes", 0) / 2**30,
+        "fits_16g": (mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)) / 2**30 <= 16.0,
+    }
+
+
+def load_all(mesh: Optional[str] = None) -> List[dict]:
+    rows = []
+    for f in sorted(ART_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if "arch" not in rec:
+            continue  # RTAC-workload artifacts (reported in §Perf H1)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def to_markdown(rows: List[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | "
+        "dominant | roofline frac | useful ratio | temp GiB | args GiB | fits |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} | "
+            f"{r['temp_gib']:.1f} | {r['args_gib']:.1f} | "
+            f"{'Y' if r['fits_16g'] else 'N'} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    rows = load_all()
+    print("roofline: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,frac,useful")
+    for r in rows:
+        print(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']:.4e},"
+            f"{r['memory_s']:.4e},{r['collective_s']:.4e},{r['dominant']},"
+            f"{r['roofline_fraction']:.3f},{r['useful_ratio']:.3f}"
+        )
+    out = Path(__file__).resolve().parents[1] / "artifacts" / "roofline.md"
+    out.write_text(to_markdown(load_all("single")) + "\n" + to_markdown(load_all("multi")))
+    print(f"wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

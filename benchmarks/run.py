@@ -1,0 +1,45 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
+--full for the paper's complete grid (n up to 1000).
+
+  table1   paper Table 1 — #Revision (AC3) vs #Recurrence (RTAC) per assignment
+  fig3     paper Fig. 3 — per-assignment enforcement time (+ batched variant)
+  roofline deliverable (g) — three-term roofline per dry-run artifact (reads
+           artifacts/dryrun; run `python -m repro.launch.dryrun --all` first)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale grid")
+    ap.add_argument(
+        "--only", choices=["table1", "fig3", "roofline"], default=None
+    )
+    args = ap.parse_args()
+    quick = not args.full
+
+    if args.only in (None, "table1"):
+        from . import bench_table1
+
+        bench_table1.main(quick=quick)
+    if args.only in (None, "fig3"):
+        from . import bench_fig3
+
+        bench_fig3.main(quick=quick)
+    if args.only in (None, "roofline"):
+        from . import roofline
+
+        try:
+            roofline.main()
+        except Exception as e:  # artifacts not generated yet
+            print(f"roofline,skipped,{e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""N-queens via MAC search — RTAC vs AC3 engines side by side.
+
+    PYTHONPATH=src python examples/nqueens_search.py [n]
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import check_solution, mac_solve, nqueens_csp
+
+
+def board(sol):
+    n = len(sol)
+    return "\n".join(
+        " ".join("Q" if sol[c] == r else "." for c in range(n)) for r in range(n)
+    )
+
+
+def main(n: int = 10):
+    csp = nqueens_csp(n)
+    for engine in ("rtac", "ac3"):
+        t0 = time.perf_counter()
+        sol, stats = mac_solve(csp, engine=engine)
+        dt = time.perf_counter() - t0
+        assert sol is not None and check_solution(csp, sol)
+        unit = "recurrences" if engine.startswith("rtac") else "revisions"
+        print(
+            f"[{engine:4s}] {n}-queens solved in {dt:.2f}s, "
+            f"{stats.n_assignments} assignments, "
+            f"mean {stats.mean_recurrences:.1f} {unit}/enforcement, "
+            f"mean {stats.mean_enforce_ms:.2f} ms/enforcement"
+        )
+    print(board(sol))
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 10)

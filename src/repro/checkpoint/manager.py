@@ -1,0 +1,146 @@
+"""Checkpointing — atomic, latest-k, async, mesh-elastic.
+
+Fault-tolerance contract (DESIGN.md §5):
+  * atomic: write to ``<dir>/tmp.<step>`` then ``rename`` — a crash mid-write
+    never corrupts the restore set;
+  * latest-k GC keeps disk bounded on long runs;
+  * async: ``save_async`` snapshots to host memory synchronously (cheap) and
+    writes on a background thread — training continues immediately;
+  * elastic: checkpoints store plain host arrays + the pytree structure; restore
+    ``device_put``s onto the CURRENT mesh's shardings, so a run checkpointed on
+    one mesh resumes on another (tested: save on (1,2) restore on (2,1)).
+
+Format: one ``.npz`` per checkpoint with flattened dotted keys + a JSON manifest
+(step, keypaths, dtypes). No orbax dependency — this container is offline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _to_savable(v: np.ndarray) -> np.ndarray:
+    # npz cannot roundtrip ml_dtypes (bfloat16 etc.) — store a uint view;
+    # restore() views back based on the target tree's dtype.
+    if v.dtype.name == "bfloat16":
+        return v.view(np.uint16)
+    return v
+
+
+def _from_saved(arr: np.ndarray, target_dtype) -> np.ndarray:
+    if np.dtype(target_dtype).name == "bfloat16" and arr.dtype == np.uint16:
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, tree) -> Path:
+        self.wait()  # one in-flight async save at a time
+        host = [(k, _to_savable(np.asarray(v))) for k, v in _flatten(tree)]
+        return self._write(step, host)
+
+    def save_async(self, step: int, tree) -> None:
+        self.wait()
+        # synchronous device->host snapshot (consistent view), async file IO
+        host = [(k, _to_savable(np.asarray(v))) for k, v in _flatten(tree)]
+
+        def work():
+            try:
+                self._write(step, host)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host: List[Tuple[str, np.ndarray]]) -> Path:
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f"tmp.{step}.{os.getpid()}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / "arrays.npz", **dict(host))
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in host],
+            "dtypes": [str(v.dtype) for _, v in host],
+            "shapes": [list(v.shape) for _, v in host],
+            "time": time.time(),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree, shardings=None):
+        """Restore onto the current mesh. ``like_tree`` provides structure;
+        ``shardings`` (same structure, NamedSharding leaves) reshards for
+        elasticity. Leaves are cast to like_tree's dtypes."""
+        path = self.dir / f"step_{step:010d}"
+        data = np.load(path / "arrays.npz")
+        keys = [k for k, _ in _flatten(like_tree)]
+        leaves = []
+        flat_like, treedef = jax.tree_util.tree_flatten(like_tree)
+        flat_sh = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(flat_like)
+        )
+        for key, like, sh in zip(keys, flat_like, flat_sh):
+            arr = _from_saved(data[key], like.dtype).astype(like.dtype)
+            if arr.shape != tuple(like.shape):
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {like.shape}")
+            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,69 @@
+"""Architecture registry — ``--arch <id>`` resolution + shape suite.
+
+Each assigned architecture lives in its own module with the exact published
+config; ``get_config(id)`` resolves ids, ``smoke_config`` derives the reduced
+same-family CPU test config.
+"""
+
+from .base import SHAPES, SMOKE_SHAPE, ModelConfig, ShapeSpec, smoke_config
+from . import (
+    command_r_plus_104b,
+    dbrx_132b,
+    granite_8b,
+    h2o_danube3_4b,
+    qwen15_05b,
+    qwen2_vl_2b,
+    qwen3_moe_235b,
+    rwkv6_3b,
+    whisper_large_v3,
+    zamba2_7b,
+)
+
+_ALL = [
+    rwkv6_3b.CONFIG,
+    whisper_large_v3.CONFIG,
+    qwen15_05b.CONFIG,
+    h2o_danube3_4b.CONFIG,
+    command_r_plus_104b.CONFIG,
+    granite_8b.CONFIG,
+    zamba2_7b.CONFIG,
+    qwen2_vl_2b.CONFIG,
+    qwen3_moe_235b.CONFIG,
+    dbrx_132b.CONFIG,
+]
+
+REGISTRY = {c.name: c for c in _ALL}
+ARCH_IDS = list(REGISTRY)
+
+# long_500k needs sub-quadratic attention (DESIGN.md §4): runs only for these.
+LONG_CONTEXT_ARCHS = {"rwkv6-3b", "zamba2-7b", "h2o-danube-3-4b"}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return REGISTRY[name]
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch, shape) cells; skipped == long_500k on full-attn."""
+    for arch in ARCH_IDS:
+        for shape in SHAPES.values():
+            skipped = shape.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS
+            if skipped and not include_skipped:
+                continue
+            yield arch, shape, skipped
+
+
+__all__ = [
+    "SHAPES",
+    "SMOKE_SHAPE",
+    "ModelConfig",
+    "ShapeSpec",
+    "smoke_config",
+    "REGISTRY",
+    "ARCH_IDS",
+    "LONG_CONTEXT_ARCHS",
+    "get_config",
+    "cells",
+]

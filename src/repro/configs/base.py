@@ -1,0 +1,146 @@
+"""Model/run configuration — one frozen dataclass consumed by every layer.
+
+``ModelConfig`` covers all five assigned families (dense / moe / ssm / hybrid /
+enc-dec / vlm); per-arch files in this package instantiate it with the exact
+published dimensions. ``ShapeSpec`` defines the assigned input-shape suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention / positions
+    attention: str = "full"  # full | swa | none
+    causal: bool = True
+    window: int = 4096  # swa window
+    qkv_bias: bool = False
+    pos: str = "rope"  # rope | mrope | learned | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, int, int] = (0, 0, 0)
+    max_pos: int = 8192  # learned-pos table size
+
+    # norm / act / embeddings
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu(swiglu) | gelu
+    tie_embeddings: bool = False
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # ssm (rwkv6 / mamba2)
+    ssm: str = ""  # rwkv6 | mamba2
+    ssm_state: int = 64
+    ssm_head_dim: int = 64
+    ssm_d_inner: int = 0  # 0 -> 2 * d_model
+    ssm_conv: int = 4
+    ssm_lora: int = 64
+    attn_every: int = 0  # hybrid: shared attention block every k ssm layers
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 1500
+
+    # compute
+    dtype: str = "bfloat16"
+    remat: bool = True
+    q_chunk: int = 2048  # query chunking threshold/size for long attention
+    ssm_chunk: int = 64
+    # dry-run cost accounting: unroll ALL scans so XLA cost_analysis counts
+    # every iteration (scan bodies are otherwise counted once). Never used for
+    # real execution or the full-depth memory compile.
+    scan_unroll: bool = False
+
+    # vocab padded up to a multiple of this for tensor-parallel divisibility
+    # (whisper's 51866 is the only assigned vocab that needs it); pad logits are
+    # masked in the loss and at decode, so semantics are unchanged.
+    vocab_pad_to: int = 128
+
+    # notes for DESIGN.md fidelity tracking
+    source: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return -(-self.vocab // m) * m
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_ssm_d_inner(self) -> int:
+        return self.ssm_d_inner or 2 * self.d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+# The assigned shape suite (identical for all 10 LM archs).
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Smoke-test shapes (CPU-runnable).
+SMOKE_SHAPE = ShapeSpec("smoke", 32, 2, "train")
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        max_pos=128,
+        window=16,
+        q_chunk=16,
+        ssm_chunk=8,
+        ssm_state=8,
+        ssm_head_dim=8,
+        ssm_d_inner=128,
+        ssm_lora=8,
+        encoder_frames=8 if cfg.family == "encdec" else cfg.encoder_frames,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        remat=False,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=4, top_k=2)
+    if cfg.attn_every:
+        kw.update(attn_every=2, n_layers=5)
+    if cfg.pos == "mrope":
+        kw.update(mrope_sections=(4, 2, 2))
+    return cfg.replace(**kw)

@@ -1,0 +1,21 @@
+"""h2o-danube-3-4b — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818 (danube series); unverified tier].
+
+SWA bounds the KV cache at `window`, making the arch sub-quadratic in context —
+it therefore RUNS the long_500k shape (windowed ring-buffer cache)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab=32000,
+    attention="swa",
+    window=4096,
+    source="arXiv:2401.16818; h2oai/h2o-danube3-4b (unverified tier)",
+)

@@ -1,0 +1,24 @@
+"""qwen2-vl-2b — VLM backbone with M-RoPE [arXiv:2409.12191; hf].
+
+Vision patch frontend is a STUB (the assignment specifies backbone only):
+``input_specs`` provides text tokens plus 3-component (t,h,w) position ids;
+with t==h==w M-RoPE reduces to standard RoPE (property-tested)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    pos="mrope",
+    mrope_sections=(16, 24, 24),  # head_dim 128 -> half 64
+    rope_theta=1e6,
+    source="arXiv:2409.12191; hf Qwen/Qwen2-VL-2B",
+)

@@ -1,0 +1,20 @@
+"""qwen3-moe-235b-a22b — 128 experts top-8, GQA kv=4, head_dim 128
+[hf:Qwen/Qwen3-235B-A22B lineage via Qwen3-30B-A3B]."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,  # independent of d_model (qwen3)
+    d_ff=1536,  # per-expert FFN width
+    vocab=151936,
+    n_experts=128,
+    top_k=8,
+    rope_theta=1e6,
+    source="hf Qwen/Qwen3-235B-A22B / Qwen3-30B-A3B",
+)

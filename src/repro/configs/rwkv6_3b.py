@@ -1,0 +1,20 @@
+"""rwkv6-3b — Finch, attention-free, data-dependent decay [arXiv:2404.05892; hf]."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    ssm="rwkv6",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,  # 2560 / 64 head channels
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab=65536,
+    attention="none",
+    pos="none",
+    norm="layernorm",
+    ssm_lora=64,
+    source="arXiv:2404.05892 (RWKV-6 Finch); hf RWKV/rwkv-6-world-3b",
+)

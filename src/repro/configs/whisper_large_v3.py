@@ -1,0 +1,30 @@
+"""whisper-large-v3 — encoder-decoder, conv/mel frontend stubbed [arXiv:2212.04356].
+
+The assigned "32L" is realized as 32 encoder + 32 decoder layers (the published
+whisper-large-v3 layout). ``input_specs`` supplies precomputed 1500-frame
+embeddings (the conv1d+mel frontend is a stub per the assignment). Learned
+positions; the table is sized for the assigned decode shapes (far beyond
+whisper's real 448-token decoder — noted in DESIGN.md §4).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,
+    encoder_layers=32,
+    encoder_frames=1500,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    qkv_bias=True,
+    pos="learned",
+    max_pos=32768,
+    norm="layernorm",
+    act="gelu",
+    tie_embeddings=True,
+    source="arXiv:2212.04356; hf openai/whisper-large-v3 (unverified tier)",
+)

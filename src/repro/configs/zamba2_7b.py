@@ -1,0 +1,25 @@
+"""zamba2-7b — Mamba2 backbone + SHARED attention block [arXiv:2411.15242].
+
+81 mamba2 layers; one shared (single-weight) attention+MLP block applied every
+``attn_every`` layers with its own KV cache per invocation. Mamba state is O(1)
+in context, so the arch runs long_500k (the shared attention uses the full
+cache there — sharded over the cache_seq axis, DESIGN.md §4)."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    ssm="mamba2",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_d_inner=7168,  # 2 * d_model
+    attn_every=6,
+    source="arXiv:2411.15242; hf Zyphra/Zamba2-7B (unverified tier)",
+)

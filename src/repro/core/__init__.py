@@ -1,0 +1,55 @@
+"""RTAC core — the paper's contribution as a composable JAX module."""
+
+from .csp import (
+    CSP,
+    CSPBenchSpec,
+    PAPER_GRID,
+    coloring_csp,
+    make_csp,
+    nqueens_csp,
+    pad_domains,
+    random_csp,
+    sudoku_csp,
+    to_paper_cons,
+)
+from .rtac import (
+    EnforceResult,
+    assign,
+    einsum_support,
+    enforce,
+    enforce_batch,
+    enforce_csp,
+    enforce_full,
+)
+from .ac3 import AC3Result, enforce_ac3, assign_np
+from .brute import ac_closure_brute, count_solutions, solve_brute
+from .search import SearchStats, check_solution, mac_solve
+
+__all__ = [
+    "CSP",
+    "CSPBenchSpec",
+    "PAPER_GRID",
+    "coloring_csp",
+    "make_csp",
+    "nqueens_csp",
+    "pad_domains",
+    "random_csp",
+    "sudoku_csp",
+    "to_paper_cons",
+    "EnforceResult",
+    "assign",
+    "einsum_support",
+    "enforce",
+    "enforce_batch",
+    "enforce_csp",
+    "enforce_full",
+    "AC3Result",
+    "enforce_ac3",
+    "assign_np",
+    "ac_closure_brute",
+    "count_solutions",
+    "solve_brute",
+    "SearchStats",
+    "check_solution",
+    "mac_solve",
+]

@@ -1,0 +1,186 @@
+"""CSP tensor representation and instance generators.
+
+The paper (RTAC, §4 / Alg. 2 `init`) represents a binary CSP as dense tensors:
+
+    Cons ∈ {0,1}^{n×n×d×d}   Cons[x,y,a,b] = 1  iff (x=a, y=b) jointly allowed
+    Vars ∈ {0,1}^{n×d}       Vars[x,a]     = 1  iff value a currently in dom(x)
+
+The paper stores all-ones d×d blocks for unconstrained pairs so that the uniform
+"support on every neighbour" test works. We keep an explicit ``mask ∈ {0,1}^{n×n}``
+of *constrained* pairs instead and store zeros for unconstrained blocks — this is
+algebraically identical (``has_support = (count > 0) | ~mask``) and lets the
+kernels skip/bitpack unconstrained blocks. ``to_paper_cons`` recovers the paper's
+exact all-ones encoding for the faithful-baseline path.
+
+All domains are padded to ``d`` columns; ``dom_sizes`` (host-side) records true
+sizes, with padding columns permanently False in ``dom``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class CSP(NamedTuple):
+    """Dense tensor CSP. A pytree; leading batch dims are allowed on ``dom``."""
+
+    cons: Array  # (n, n, d, d) bool — allowed value pairs; zero block if unconstrained
+    mask: Array  # (n, n) bool — True where a constraint exists (symmetric, False diag)
+    dom: Array  # (n, d) bool — current domains
+
+    @property
+    def n_vars(self) -> int:
+        return self.cons.shape[0]
+
+    @property
+    def dom_size(self) -> int:
+        return self.cons.shape[-1]
+
+
+def to_paper_cons(csp: CSP) -> Array:
+    """The paper's exact encoding: all-ones d×d blocks for unconstrained pairs."""
+    ones = jnp.ones_like(csp.cons)
+    return jnp.where(csp.mask[:, :, None, None], csp.cons, ones)
+
+
+def make_csp(cons: np.ndarray, mask: np.ndarray, dom: np.ndarray) -> CSP:
+    return CSP(
+        cons=jnp.asarray(cons, dtype=jnp.bool_),
+        mask=jnp.asarray(mask, dtype=jnp.bool_),
+        dom=jnp.asarray(dom, dtype=jnp.bool_),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+
+def random_csp(
+    n_vars: int,
+    dom_size: int,
+    density: float,
+    tightness: float = 0.3,
+    seed: int = 0,
+) -> CSP:
+    """Paper §5.2: each of the n(n-1)/2 pairs gets a constraint with prob ``density``.
+
+    Each existing constraint's relation is a uniform random subset of the d×d
+    tuple space where each tuple is *disallowed* with prob ``tightness``
+    (standard model-A random CSPs; the paper does not pin tightness).
+    """
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n_vars, k=1)
+    edge = rng.random(len(iu[0])) < density
+    mask = np.zeros((n_vars, n_vars), dtype=bool)
+    mask[iu[0][edge], iu[1][edge]] = True
+    mask |= mask.T
+
+    allowed = rng.random((n_vars, n_vars, dom_size, dom_size)) >= tightness
+    # symmetrize: Cons[y,x,b,a] == Cons[x,y,a,b]
+    upper = np.triu(np.ones((n_vars, n_vars), dtype=bool), k=1)
+    allowed = np.where(
+        upper[:, :, None, None], allowed, np.transpose(allowed, (1, 0, 3, 2))
+    )
+    cons = allowed & mask[:, :, None, None]
+    dom = np.ones((n_vars, dom_size), dtype=bool)
+    return make_csp(cons, mask, dom)
+
+
+def nqueens_csp(n: int) -> CSP:
+    """N-queens as a binary CSP: one variable per column, domain = row index."""
+    a = np.arange(n)
+    ra, rb = np.meshgrid(a, a, indexing="ij")  # (d, d) candidate rows
+    cons = np.zeros((n, n, n, n), dtype=bool)
+    mask = np.zeros((n, n), dtype=bool)
+    for x in range(n):
+        for y in range(n):
+            if x == y:
+                continue
+            ok = (ra != rb) & (np.abs(ra - rb) != abs(x - y))
+            cons[x, y] = ok
+            mask[x, y] = True
+    dom = np.ones((n, n), dtype=bool)
+    return make_csp(cons, mask, dom)
+
+
+def coloring_csp(adjacency: np.ndarray, n_colors: int) -> CSP:
+    """Graph colouring: adjacent vertices take different colours."""
+    n = adjacency.shape[0]
+    neq = ~np.eye(n_colors, dtype=bool)
+    mask = adjacency.astype(bool) & ~np.eye(n, dtype=bool)
+    cons = mask[:, :, None, None] & neq[None, None, :, :]
+    dom = np.ones((n, n_colors), dtype=bool)
+    return make_csp(cons, mask, dom)
+
+
+def sudoku_csp(givens: "np.ndarray") -> CSP:
+    """9x9 sudoku as a binary CSP: 81 variables, dom=9, all-diff on rows,
+    columns and 3x3 boxes. ``givens``: (9,9) ints, 0 = empty."""
+    n, d = 81, 9
+    neq = ~np.eye(d, dtype=bool)
+    mask = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        ri, ci = divmod(i, 9)
+        for j in range(n):
+            if i == j:
+                continue
+            rj, cj = divmod(j, 9)
+            same_box = (ri // 3 == rj // 3) and (ci // 3 == cj // 3)
+            if ri == rj or ci == cj or same_box:
+                mask[i, j] = True
+    cons = mask[:, :, None, None] & neq[None, None, :, :]
+    dom = np.ones((n, d), dtype=bool)
+    for i in range(n):
+        ri, ci = divmod(i, 9)
+        g = int(givens[ri, ci])
+        if g:
+            dom[i, :] = False
+            dom[i, g - 1] = True
+    return make_csp(cons, mask, dom)
+
+
+def pad_domains(csp: CSP, pad_to: int) -> CSP:
+    """Pad the value axis to ``pad_to`` (kernel tile alignment). Padding values are
+    absent from every domain and allowed by no constraint, so the closure is
+    unchanged."""
+    d = csp.dom_size
+    if pad_to < d:
+        raise ValueError(f"pad_to={pad_to} < dom_size={d}")
+    if pad_to == d:
+        return csp
+    p = pad_to - d
+    cons = jnp.pad(csp.cons, ((0, 0), (0, 0), (0, p), (0, p)))
+    dom = jnp.pad(csp.dom, ((0, 0), (0, p)))
+    return CSP(cons=cons, mask=csp.mask, dom=dom)
+
+
+@dataclasses.dataclass(frozen=True)
+class CSPBenchSpec:
+    """One cell of the paper's §5.2 benchmark grid."""
+
+    n_vars: int
+    density: float
+    dom_size: int = 20
+    tightness: float = 0.3
+    seed: int = 0
+
+    def build(self) -> CSP:
+        return random_csp(
+            self.n_vars, self.dom_size, self.density, self.tightness, self.seed
+        )
+
+
+# The 25-cell grid from paper §5.2 / Table 1.
+PAPER_GRID = [
+    CSPBenchSpec(n_vars=n, density=p)
+    for n in (100, 250, 500, 750, 1000)
+    for p in (0.10, 0.25, 0.50, 0.75, 1.00)
+]

@@ -1,0 +1,140 @@
+"""Distributed RTAC — shard_map over the (data, model) production mesh.
+
+Sharding story (DESIGN.md §2/§5): the constraint tensor is O(n²d²) and dominates
+memory, so its *x*-rows are sharded over the ``model`` axis — each model shard
+revises its own block of variables against the full (replicated) domain tensor,
+then the updated domain blocks are ``all_gather``-ed (n·d bool per recurrence,
+tiny next to the contraction). The batch of domains (search nodes / restarts) is
+embarrassingly parallel over the ``data`` axis (and ``pod`` when present).
+
+The entire fixpoint (``lax.while_loop``) lives INSIDE ``shard_map``: the loop
+predicate is computed redundantly-but-identically on every shard from the
+gathered domain, so no host sync or scalar collective is needed per recurrence.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .rtac import EnforceResult
+
+Array = jax.Array
+
+
+def _local_revise(cons_blk, mask_blk, dom, changed, dtype):
+    """Revise this shard's x-block against the full domain.
+
+    cons_blk: (nx, n, d, d) — x-rows owned by this model shard
+    dom:      (n, d) full (replicated within the model axis)
+    returns violated_blk: (nx, d)
+    """
+    cnt = jnp.einsum(
+        "xyab,yb->xya",
+        cons_blk.astype(dtype),
+        dom.astype(dtype),
+        preferred_element_type=jnp.float32,
+    )
+    has = (cnt > 0) | ~mask_blk[:, :, None]  # (nx, n, d)
+    return jnp.any(changed[None, :, None] & ~has, axis=1)  # (nx, d)
+
+
+def _local_revise_bitpacked(cons_blk_pk, mask_blk, dom, changed, dtype):
+    """Bitpacked revise (beyond paper, DESIGN.md §2): the b-axis of the
+    constraint block is packed into uint32 words, the support test becomes
+    AND + any-nonzero — 8× less constraint traffic than uint8, 16× than bf16.
+
+    cons_blk_pk: (nx, n, d, W) uint32;  dom: (n, d) bool (packed on the fly —
+    n·d bits, negligible next to the constraint stream).
+    """
+    from repro.kernels.ref import pack_bits_ref
+
+    dom_pk = pack_bits_ref(dom)  # (n, W) uint32
+    anded = cons_blk_pk & dom_pk[None, :, None, :]  # (nx, n, d, W)
+    has = jnp.any(anded != 0, axis=-1) | ~mask_blk[:, :, None]
+    return jnp.any(changed[None, :, None] & ~has, axis=1)
+
+
+def _enforce_one(cons_blk, mask_blk, dom0, changed0, *, axis_name, dtype,
+                 revise=_local_revise):
+    """Fixpoint for ONE domain tensor (vmapped over the local batch)."""
+    nx = cons_blk.shape[0]
+    idx = lax.axis_index(axis_name)
+    x0 = idx * nx
+
+    consistent0 = ~jnp.any(jnp.sum(dom0, axis=-1) == 0)
+
+    def cond(state):
+        dom, changed, consistent, k = state
+        return jnp.logical_and(consistent, jnp.any(changed))
+
+    def body(state):
+        dom, changed, consistent, k = state
+        violated = revise(cons_blk, mask_blk, dom, changed, dtype)
+        old_blk = lax.dynamic_slice_in_dim(dom, x0, nx, axis=0)
+        new_blk = old_blk & ~violated
+        # Reassemble the full domain: every shard contributes its x-block.
+        new_dom = lax.all_gather(new_blk, axis_name, axis=0, tiled=True)
+        new_changed = jnp.any(new_dom != dom, axis=-1)
+        new_consistent = ~jnp.any(jnp.sum(new_dom, axis=-1) == 0)
+        return (new_dom, new_changed, new_consistent, k + 1)
+
+    state0 = (dom0, changed0 & consistent0, consistent0, jnp.zeros((), jnp.int32))
+    dom, _, consistent, k = lax.while_loop(cond, body, state0)
+    return EnforceResult(dom, consistent, k)
+
+
+def make_sharded_enforcer(
+    mesh: Mesh,
+    model_axis: str = "model",
+    batch_axes=("data",),
+    dtype=jnp.bfloat16,
+    impl: str = "einsum",  # "einsum" (paper-faithful dense) | "bitpacked"
+):
+    """Build a jitted (cons, mask, dom_batch, changed_batch) -> EnforceResult.
+
+    cons (n,n,d,d) bool — or (n,n,d,W) uint32 for impl="bitpacked" — sharded
+    P(model); mask (n,n) sharded P(model); dom_batch (B,n,d) and
+    changed_batch (B,n) sharded P(batch_axes). Returned dom is sharded like
+    the input batch.
+    """
+    revise = _local_revise if impl == "einsum" else _local_revise_bitpacked
+    batch_spec = P(batch_axes)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(model_axis),  # cons x-rows
+            P(model_axis),  # mask x-rows
+            batch_spec,  # dom batch
+            batch_spec,  # changed batch
+        ),
+        out_specs=EnforceResult(batch_spec, batch_spec, batch_spec),
+        check_rep=False,
+    )
+    def _sharded(cons_blk, mask_blk, dom_b, changed_b):
+        fn = functools.partial(
+            _enforce_one, axis_name=model_axis, dtype=dtype, revise=revise
+        )
+        return jax.vmap(lambda d, c: fn(cons_blk, mask_blk, d, c))(dom_b, changed_b)
+
+    @jax.jit
+    def enforce_sharded(cons, mask, dom_batch, changed_batch):
+        return _sharded(cons, mask, dom_batch, changed_batch)
+
+    return enforce_sharded
+
+
+def shard_csp_arrays(mesh: Mesh, cons, mask, dom_batch, model_axis="model", batch_axes=("data",)):
+    """Place CSP arrays with the shardings `make_sharded_enforcer` expects."""
+    cons_s = jax.device_put(cons, NamedSharding(mesh, P(model_axis)))
+    mask_s = jax.device_put(mask, NamedSharding(mesh, P(model_axis)))
+    dom_s = jax.device_put(dom_batch, NamedSharding(mesh, P(batch_axes)))
+    return cons_s, mask_s, dom_s

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spot (the revise contraction).
+
+rtac_support   dense uint8 fused support-count+clamp+AND-reduce (VPU streaming)
+bitpack_support  uint32 bitpacked variant (beyond paper: 16x less traffic)
+ops            jit'd wrappers + padding/packing + enforce_* entry points
+ref            pure-jnp oracles the kernels are validated against
+"""
+
+from . import bitpack_support, ops, ref, rtac_support
+
+__all__ = ["bitpack_support", "ops", "ref", "rtac_support"]

@@ -1,0 +1,85 @@
+"""Bitpacked RTAC revise kernel — beyond-paper bandwidth optimization.
+
+The dense kernel streams one byte per constraint bit; since the revise pass only
+needs "∃ support", the value axis b packs into uint32 words (Lecoutre & Vion'08
+bitwise AC, fused into the paper's tensor recurrence). Constraint-tensor traffic
+drops 8× vs uint8 (32× vs the paper's fp32 matmul operands) — and the pass is
+memory-bound, so this is a direct roofline win (EXPERIMENTS.md §Perf).
+
+Layout mirrors rtac_support.py with the b-axis packed:
+
+  cons_p2[(x·d + a), (y·W + w)]  uint32,  W = ceil(d/32)
+  grid (i over x-row-blocks, j over y-col-blocks), j sequential-reduce
+  support test:  has[x,a,y] = any_w( cons_word & dom_word ) != 0
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _revise_packed_kernel(cons_ref, dom_ref, changed_ref, mask_ref, out_ref, *, w: int, d: int):
+    j = pl.program_id(1)
+
+    br = cons_ref.shape[0]  # RX * d
+    rx = mask_ref.shape[0]
+    ry = mask_ref.shape[1]
+
+    c = cons_ref[...]  # (BR, RY*W) uint32
+    dw = dom_ref[...]  # (1, RY*W) uint32
+    anded = c & dw  # word-wise AND
+    has_any = jnp.any(anded.reshape(br, ry, w) != 0, axis=-1)  # (BR, RY)
+    m = mask_ref[...].astype(jnp.bool_)
+    m_rows = jnp.broadcast_to(m[:, None, :], (rx, d, ry)).reshape(br, ry)
+    has = has_any | ~m_rows
+    ch = changed_ref[...].astype(jnp.bool_)  # (1, RY)
+    viol = jnp.any(ch & ~has, axis=-1)  # (BR,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] = out_ref[...] | viol[None, :].astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "w", "block_rx", "block_ry", "interpret")
+)
+def packed_revise(
+    cons_p2: Array,  # (n*d, n*W) uint32
+    dom_p: Array,  # (1, n*W) uint32
+    changed: Array,  # (1, n) uint8
+    mask: Array,  # (n, n) uint8
+    *,
+    d: int,
+    w: int,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    interpret: bool = True,
+) -> Array:
+    nd = cons_p2.shape[0]
+    n = nd // d
+    assert cons_p2.shape[1] == n * w
+    assert n % block_rx == 0 and n % block_ry == 0, (n, block_rx, block_ry)
+    br, bcw = block_rx * d, block_ry * w
+    grid = (n // block_rx, n // block_ry)
+
+    return pl.pallas_call(
+        functools.partial(_revise_packed_kernel, w=w, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bcw), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bcw), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_ry), lambda i, j: (0, j)),
+            pl.BlockSpec((block_rx, block_ry), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nd), jnp.uint8),
+        interpret=interpret,
+    )(cons_p2, dom_p, changed, mask)

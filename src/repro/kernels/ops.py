@@ -1,0 +1,160 @@
+"""Jitted wrappers binding the Pallas revise kernels into the RTAC fixpoint.
+
+Handles the shape contract between the algorithm (n vars × d values, any sizes)
+and the kernels (padded, flattened, optionally bitpacked):
+
+- n is padded to the block multiple; padded variables are *unconstrained with
+  full domains*, so they never change, never violate, and never trip the
+  wipeout check. Padded values (d-axis) are absent from every domain and
+  allowed by no constraint. The closure over the original slice is unchanged.
+- revise_fn factories are ``lru_cache``-d on (shapes, blocks) so the returned
+  function object is stable and keys `enforce_generic`'s jit cache correctly.
+
+On this CPU container the kernels run in ``interpret=True`` (Pallas executes
+the kernel body in Python); on a real TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csp import CSP
+from repro.core.rtac import EnforceResult, enforce_generic
+from . import bitpack_support, ref, rtac_support
+
+Array = jax.Array
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_csp(csp: CSP, n_block: int, d_mult: int):
+    """Returns (cons, mask, dom, n_p, d_p) padded as described above."""
+    n, d = csp.dom.shape
+    n_p = _round_up(max(n, n_block), n_block)
+    d_p = _round_up(d, d_mult)
+    cons = jnp.pad(
+        csp.cons, ((0, n_p - n), (0, n_p - n), (0, d_p - d), (0, d_p - d))
+    )
+    mask = jnp.pad(csp.mask, ((0, n_p - n), (0, n_p - n)))
+    dom = jnp.pad(csp.dom, ((0, 0), (0, d_p - d)))
+    pad_rows = jnp.zeros((n_p - n, d_p), jnp.bool_).at[:, 0].set(True)
+    dom = jnp.concatenate([dom, pad_rows], axis=0)
+    return cons, mask, dom, n_p, d_p
+
+
+def _pad_changed(changed0: Optional[Array], n: int, n_p: int) -> Array:
+    if changed0 is None:
+        changed0 = jnp.ones((n,), jnp.bool_)
+    return jnp.pad(changed0, (0, n_p - n))
+
+
+# ---------------------------------------------------------------------------
+# Dense uint8 kernel
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_revise_fn(n_p: int, d_p: int, block_rx: int, block_ry: int, interpret: bool):
+    def revise_fn(net, dom, changed):
+        cons2, mask_u8 = net
+        viol = rtac_support.dense_revise(
+            cons2,
+            dom.astype(jnp.uint8).reshape(1, n_p * d_p),
+            changed.astype(jnp.uint8).reshape(1, n_p),
+            mask_u8,
+            d=d_p,
+            block_rx=block_rx,
+            block_ry=block_ry,
+            interpret=interpret,
+        )
+        return viol.reshape(n_p, d_p).astype(jnp.bool_)
+
+    return revise_fn
+
+
+def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
+    """-> (network, dom_padded, (n_p, d_p)). network = (cons2 u8, mask u8)."""
+    cons, mask, dom_p, n_p, d_p = _pad_csp(csp, max(block_rx, block_ry), 8)
+    cons2 = (
+        jnp.transpose(cons, (0, 2, 1, 3))
+        .reshape(n_p * d_p, n_p * d_p)
+        .astype(jnp.uint8)
+    )
+    return (cons2, mask.astype(jnp.uint8)), dom_p, (n_p, d_p)
+
+
+def enforce_dense_kernel(
+    csp: CSP,
+    changed0: Optional[Array] = None,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    interpret: bool = True,
+) -> EnforceResult:
+    """End-to-end RTAC with the dense Pallas revise."""
+    network, dom_p, (n_p, d_p) = prepare_dense(csp, block_rx, block_ry)
+    n, d = csp.dom.shape
+    revise_fn = _dense_revise_fn(n_p, d_p, block_rx, block_ry, interpret)
+    res = enforce_generic(network, dom_p, _pad_changed(changed0, n, n_p), revise_fn=revise_fn)
+    return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)
+
+
+# ---------------------------------------------------------------------------
+# Bitpacked uint32 kernel
+# ---------------------------------------------------------------------------
+
+
+def pack_network(cons: Array, n_p: int, d_p: int) -> Tuple[Array, int]:
+    """(n_p,n_p,d_p,d_p) bool -> ((n_p*d_p, n_p*W) uint32, W)."""
+    packed = ref.pack_bits_ref(cons)  # (n_p, n_p, d_p, W)
+    w = packed.shape[-1]
+    return jnp.transpose(packed, (0, 2, 1, 3)).reshape(n_p * d_p, n_p * w), w
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_revise_fn(
+    n_p: int, d_p: int, w: int, block_rx: int, block_ry: int, interpret: bool
+):
+    def revise_fn(net, dom, changed):
+        cons_p2, mask_u8 = net
+        dom_pk = ref.pack_bits_ref(dom).reshape(1, n_p * w)
+        viol = bitpack_support.packed_revise(
+            cons_p2,
+            dom_pk,
+            changed.astype(jnp.uint8).reshape(1, n_p),
+            mask_u8,
+            d=d_p,
+            w=w,
+            block_rx=block_rx,
+            block_ry=block_ry,
+            interpret=interpret,
+        )
+        return viol.reshape(n_p, d_p).astype(jnp.bool_)
+
+    return revise_fn
+
+
+def prepare_packed(csp: CSP, block_rx: int = 8, block_ry: int = 8):
+    cons, mask, dom_p, n_p, d_p = _pad_csp(csp, max(block_rx, block_ry), 8)
+    cons_p2, w = pack_network(cons, n_p, d_p)
+    return (cons_p2, mask.astype(jnp.uint8)), dom_p, (n_p, d_p, w)
+
+
+def enforce_packed_kernel(
+    csp: CSP,
+    changed0: Optional[Array] = None,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    interpret: bool = True,
+) -> EnforceResult:
+    """End-to-end RTAC with the bitpacked Pallas revise (8× less cons traffic)."""
+    network, dom_p, (n_p, d_p, w) = prepare_packed(csp, block_rx, block_ry)
+    n, d = csp.dom.shape
+    revise_fn = _packed_revise_fn(n_p, d_p, w, block_rx, block_ry, interpret)
+    res = enforce_generic(network, dom_p, _pad_changed(changed0, n, n_p), revise_fn=revise_fn)
+    return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the RTAC kernels.
+
+``revise_ref`` is the ground truth for one recurrence of Eq. 1 (incremental,
+Prop. 2 masked form): violated[x, a] == some *changed* neighbour y gives (x, a)
+no support. Both Pallas kernels (dense uint8 and bitpacked uint32) must match it
+bit-exactly over shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def support_counts_ref(cons: Array, dom: Array, dtype=jnp.float32) -> Array:
+    """counts[x, y, a] = |{b in dom(y) : cons[x,y,a,b]}| — Alg. 1 line 14."""
+    return jnp.einsum(
+        "xyab,yb->xya",
+        cons.astype(dtype),
+        dom.astype(dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def has_support_ref(cons: Array, mask: Array, dom: Array) -> Array:
+    """has[x, y, a] — support exists, or (x, y) unconstrained."""
+    cnt = support_counts_ref(cons, dom)
+    return (cnt > 0) | ~mask[:, :, None]
+
+
+def revise_ref(cons: Array, mask: Array, dom: Array, changed: Array) -> Array:
+    """violated[x, a] (n, d) bool — the fused quantity both kernels produce."""
+    has = has_support_ref(cons, mask, dom)
+    return jnp.any(changed[None, :, None] & ~has, axis=1)
+
+
+def pack_bits_ref(bits: Array) -> Array:
+    """Pack a trailing bool axis into uint32 words (little-endian bit order).
+
+    (..., d) bool -> (..., ceil(d/32)) uint32
+    """
+    d = bits.shape[-1]
+    w = -(-d // 32)
+    pad = w * 32 - d
+    b = jnp.pad(bits.astype(jnp.uint32), [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = b.reshape(*bits.shape[:-1], w, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def revise_packed_ref(
+    cons_packed: Array,  # (n, n, d, W) uint32 — b-axis packed
+    mask: Array,  # (n, n) bool
+    dom_packed: Array,  # (n, W) uint32
+    changed: Array,  # (n,) bool
+) -> Array:
+    """Bitpacked oracle: support test is AND over words, nonzero anywhere."""
+    anded = cons_packed & dom_packed[None, :, None, :]  # (n, n, d, W)
+    has = jnp.any(anded != 0, axis=-1) | ~mask[:, :, None]  # (n, n, d)
+    return jnp.any(changed[None, :, None] & ~has, axis=1)  # (n, d)

@@ -1,0 +1,101 @@
+"""Dense RTAC revise kernel — fused support-count + clamp + changed-masked AND-reduce.
+
+TPU adaptation of the paper's Alg. 1 lines 14-16 (see DESIGN.md §2). The GPU
+implementation is a cuBLAS matmul producing the (n, n, d) support-count tensor in
+HBM, followed by separate clamp/sum/where kernels. The contraction has arithmetic
+intensity ~2 FLOP per constraint byte — memory-bound — so on TPU the correct
+shape is a single streaming pass over the constraint tensor on the VPU with
+everything fused, never materializing the (n, n, d) intermediate.
+
+Layout: the 4-D constraint tensor is viewed as a 2-D matrix
+``cons2[(x·d + a), (y·d + b)]`` so VMEM tiles are plain 2-D blocks:
+
+  grid (i over x-row-blocks, j over y-col-blocks)   — j is the reduction dim
+  cons2 block   (BR, BC) uint8   BR = RX·d rows, BC = RY·d cols
+  dom block     (1, BC)   uint8  (flattened domains of the RY vars)
+  changed block (1, RY)   uint8
+  mask block    (RX, RY)  uint8
+  out block     (1, BR)   uint8  — violated, indexed by i only: revisited across
+                                   j with OR-accumulation (sequential TPU grid)
+
+In-kernel: sup = cons2 * dom (VPU int8), per-y counts by (BR, RY, d) reshape-sum,
+has = cnt>0 | ~mask, partial violated = any_y(changed & ~has) OR-ed into out.
+
+Block sizes are multiples of (8, 128) sublane×lane tiles when d permits; ops.py
+pads n and d so every grid cell is full (padding is inert: padded vars are
+unconstrained, never in a domain, never changed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _revise_kernel(cons_ref, dom_ref, changed_ref, mask_ref, out_ref, *, d: int):
+    j = pl.program_id(1)
+
+    br = cons_ref.shape[0]
+    bc = cons_ref.shape[1]
+    rx = mask_ref.shape[0]
+    ry = mask_ref.shape[1]
+
+    c = cons_ref[...]  # (BR, BC) uint8
+    dval = dom_ref[...]  # (1, BC) uint8
+    sup = (c & dval).astype(jnp.int32)  # 0/1 — AND == product for bits
+    # per-y support counts: (BR, RY, d) -> (BR, RY)
+    cnt = jnp.sum(sup.reshape(br, ry, d), axis=-1)
+    # expand mask rows var->values: (RX, RY) -> (BR, RY) via broadcast+reshape
+    m = mask_ref[...].astype(jnp.bool_)  # (RX, RY)
+    m_rows = jnp.broadcast_to(m[:, None, :], (rx, d, ry)).reshape(br, ry)
+    has = (cnt > 0) | ~m_rows  # (BR, RY)
+    ch = changed_ref[...].astype(jnp.bool_)  # (1, RY)
+    viol = jnp.any(ch & ~has, axis=-1)  # (BR,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] = out_ref[...] | viol[None, :].astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "block_rx", "block_ry", "interpret")
+)
+def dense_revise(
+    cons2: Array,  # (n*d, n*d) uint8 — flattened [x,a],[y,b]
+    dom_flat: Array,  # (1, n*d) uint8
+    changed: Array,  # (1, n) uint8
+    mask: Array,  # (n, n) uint8
+    *,
+    d: int,
+    block_rx: int = 8,  # x-vars per row block
+    block_ry: int = 8,  # y-vars per col block
+    interpret: bool = True,
+) -> Array:
+    """Returns violated (1, n*d) uint8. Shapes must be pre-padded so that
+    ``block_rx | n`` and ``block_ry | n``."""
+    nd = cons2.shape[0]
+    n = nd // d
+    assert n % block_rx == 0 and n % block_ry == 0, (n, block_rx, block_ry)
+    br, bc = block_rx * d, block_ry * d
+    grid = (n // block_rx, n // block_ry)
+
+    return pl.pallas_call(
+        functools.partial(_revise_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_ry), lambda i, j: (0, j)),
+            pl.BlockSpec((block_rx, block_ry), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nd), jnp.uint8),
+        interpret=interpret,
+    )(cons2, dom_flat, changed, mask)

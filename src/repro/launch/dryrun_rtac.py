@@ -1,0 +1,112 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Production-scale dry-run for the PAPER'S OWN workload — distributed RTAC.
+
+The "most representative of the paper's technique" hillclimb cell
+(EXPERIMENTS.md §Perf): a production CSP (n=4096 vars, d=32 values — the
+constraint tensor is 16 GiB dense, 64 MiB/chip over the model axis) with a
+batch of 512 search-node domains over (pod ×) data, enforced by the
+shard_map fixpoint of `core/sharded.py`.
+
+Variants (the hillclimb axis):
+  einsum-bf16   paper-faithful tensorized contraction (matmul on the MXU)
+  einsum-u8     dense uint8 support test on the VPU (2× less traffic)
+  bitpacked     uint32 AND/any words (16× less constraint traffic than bf16)
+
+Note on counting: the fixpoint is a `while` loop whose body XLA counts once —
+all numbers below are therefore PER RECURRENCE (multiply by the empirical
+3–5 recurrences of Table 1 for a full enforcement).
+
+    python -m repro.launch.dryrun_rtac [--mesh both]
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharded import make_sharded_enforcer
+from repro.launch.dryrun import _cost_dict, _mem_dict
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.hlo_stats import collective_stats, total_wire_bytes
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+N_VARS = 4096
+DOM = 32
+BATCH = 512
+
+
+def run_variant(variant: str, mesh_kind: str) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    batch_axes = ("pod", "data") if mesh_kind == "multi" else ("data",)
+    impl = "bitpacked" if variant == "bitpacked" else "einsum"
+    dtype = {"einsum-bf16": jnp.bfloat16, "einsum-u8": jnp.uint8}.get(variant, jnp.bfloat16)
+    enf = make_sharded_enforcer(mesh, batch_axes=batch_axes, dtype=dtype, impl=impl)
+
+    w = DOM // 32
+    if variant == "bitpacked":
+        cons = jax.ShapeDtypeStruct((N_VARS, N_VARS, DOM, w), jnp.uint32)
+    else:
+        cons = jax.ShapeDtypeStruct((N_VARS, N_VARS, DOM, DOM), jnp.bool_)
+    mask = jax.ShapeDtypeStruct((N_VARS, N_VARS), jnp.bool_)
+    dom = jax.ShapeDtypeStruct((BATCH, N_VARS, DOM), jnp.bool_)
+    ch = jax.ShapeDtypeStruct((BATCH, N_VARS), jnp.bool_)
+
+    t0 = time.time()
+    lowered = enf.lower(cons, mask, dom, ch)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    rec = {
+        "workload": "rtac",
+        "variant": variant,
+        "mesh": mesh_kind,
+        "n_vars": N_VARS,
+        "dom": DOM,
+        "batch": BATCH,
+        "n_devices": int(mesh.devices.size),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": _mem_dict(compiled),
+        "cost_analysis": _cost_dict(compiled),  # per recurrence (while body)
+        "collectives": coll,
+        "collective_wire_bytes": total_wire_bytes(coll),
+    }
+    ca = rec["cost_analysis"]
+    mem = rec["memory_analysis"]
+    print(
+        f"[dryrun-rtac] {variant:12s} × {mesh_kind}: compile {t_compile:.1f}s "
+        f"flops/dev={ca.get('flops', 0):.3e} bytes/dev={ca.get('bytes accessed', 0):.3e} "
+        f"wire/dev={rec['collective_wire_bytes']:.3e}B "
+        f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+        f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB",
+        flush=True,
+    )
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument(
+        "--variants", default="einsum-bf16,einsum-u8,bitpacked"
+    )
+    args = ap.parse_args()
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh_kind in meshes:
+        for variant in args.variants.split(","):
+            rec = run_variant(variant, mesh_kind)
+            path = ART_DIR / f"rtac__{variant}__{mesh_kind}.json"
+            path.write_text(json.dumps(rec, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

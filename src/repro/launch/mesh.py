@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches jax
+device state). Single pod: (data=16, model=16) = 256 chips; multi-pod adds the
+leading 'pod' axis (2 × 256 = 512 chips) carrying only data-parallel gradient
+traffic (TP stays intra-pod — inter-pod links are the slow tier, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh (tests / examples / elasticity)."""
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+
+
+def host_device_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices exist — smoke/integration."""
+    return make_mesh((n_data, n_model), ("data", "model"))

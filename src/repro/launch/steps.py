@@ -1,0 +1,293 @@
+"""Jitted step builders — train / prefill / decode — with full shardings.
+
+Each builder returns (jitted_fn, in_shardings, out_shardings, abstract_inputs)
+so the same machinery serves real execution (train.py/serve.py) and the
+multi-pod dry-run (ShapeDtypeStruct lowering, no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def lax_scan_unrollable(body, init, xs, unroll: bool):
+    return lax.scan(body, init, xs, unroll=True if unroll else 1)
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import build_model, input_specs
+from repro.models.param import abstract_params
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule
+from repro.parallel.sharding import (
+    ShardingCtx,
+    make_ctx,
+    param_pspecs,
+    sharding_ctx,
+    spec_for,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+_INPUT_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "enc_embed": ("batch", None, "embed"),
+    "pos3": ("batch", "seq", None),
+}
+
+
+def batch_pspecs(specs: Dict[str, jax.ShapeDtypeStruct], ctx: ShardingCtx):
+    out = {}
+    for name, s in specs.items():
+        axes = _INPUT_AXES.get(name, ("batch",) + (None,) * (len(s.shape) - 1))
+        out[name] = spec_for(axes[: len(s.shape)], s.shape, ctx.act_rules, ctx.mesh_shape, ctx.log)
+    return out
+
+
+def _named(ctx, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def make_optimizer(
+    total_steps: int = 10000, n_params: int = 0, keep_master: bool = False
+) -> AdamW:
+    # ≥50B params: bf16 Adam moments (8-bit-Adam-style memory saving) so the
+    # optimizer state fits the 16GB/chip HBM envelope; recorded in DESIGN.md §5.
+    moment_dtype = jnp.bfloat16 if n_params >= 50e9 else jnp.float32
+    return AdamW(
+        lr=cosine_schedule(3e-4, 200, total_steps),
+        moment_dtype=moment_dtype,
+        keep_master=keep_master,
+    )
+
+
+ACTIVATION_BUDGET_BYTES = 3e9  # HBM share for saved activation checkpoints
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardingCtx) -> int:
+    """Gradient-accumulation factor keeping per-layer activation checkpoints in
+    HBM. Dominant saved tensor per layer = residual stream
+    (B/m/dp)·S·d_model·2 bytes; pick the smallest m with total ≤ budget,
+    subject to m | B and dp | (B/m) (batch stays evenly data-sharded)."""
+    ms = ctx.mesh_shape
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= ms.get(ax, 1)
+    tp = ms.get("model", 1)
+    b, s = shape.global_batch, shape.seq_len
+    # attention-score working set is NOT rematerialized away (the q-chunk scan
+    # lives inside the checkpointed block): if heads don't shard over 'model'
+    # (e.g. whisper's 20 heads on a 16-way axis), it dominates.
+    h_local = cfg.n_heads // tp if cfg.n_heads % tp == 0 else cfg.n_heads
+    qc = min(cfg.q_chunk or s, s)
+    m = 1
+    while True:
+        b_loc = b // m // dp
+        resid = cfg.n_layers * b_loc * s * cfg.d_model * 2
+        scores = 2 * b_loc * h_local * qc * s * 4 if cfg.attention != "none" else 0
+        if resid + scores <= ACTIVATION_BUDGET_BYTES:
+            return m
+        nxt = m * 2
+        if b % nxt != 0 or (b // nxt) % dp != 0:
+            return m  # smallest legal batch per device reached
+        m = nxt
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    ctx: ShardingCtx,
+    microbatches: int = 0,  # 0 = auto
+    bf16_params: bool = False,  # bf16 wire params + fp32 master in optimizer
+):
+    """Returns (jit_fn, (state_shardings, batch_shardings), abstract (state, batch))."""
+    model = build_model(cfg)
+    from repro.models.param import count_params
+
+    opt = make_optimizer(
+        n_params=count_params(build_model(cfg).decls()), keep_master=bf16_params
+    )
+    m = microbatches or default_microbatches(cfg, shape, ctx)
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    # If one-sequence-per-device microbatches still overflow the activation
+    # budget, shard the saved residual stream over 'model' (sequence parallel).
+    ms = ctx.mesh_shape
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= ms.get(ax, 1)
+    per_dev = cfg.n_layers * (shape.global_batch // m // dp) * shape.seq_len * cfg.d_model * 2
+    if per_dev > ACTIVATION_BUDGET_BYTES and ms.get("model", 1) > 1:
+        ctx.act_rules["seq_resid"] = ("model",)
+        ctx.log.append(
+            f"seq_resid -> model (saved resid {per_dev/2**30:.1f}GiB/dev > budget; microbatches={m})"
+        )
+
+    def grads_of(params, mb_batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, mb_batch)
+
+    def train_step(state: TrainState, batch):
+        with sharding_ctx(ctx):
+            if m == 1:
+                (loss, metrics), grads = grads_of(state.params, batch)
+            else:
+                # gradient accumulation: scan over microbatches; the grads
+                # accumulator shards like the params (FSDP), so accumulation
+                # adds no per-device memory beyond one param-sized buffer.
+                def reshape_mb(name, x):
+                    y = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+                    axes = _INPUT_AXES.get(
+                        name, ("batch",) + (None,) * (x.ndim - 1)
+                    )[: x.ndim]
+                    from repro.parallel.sharding import shard_act
+
+                    return shard_act(y, (None,) + tuple(axes))
+
+                mb_batch = {k: reshape_mb(k, v) for k, v in batch.items()}
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+                )
+
+                def body(carry, mb):
+                    g_acc, loss_acc, aux_acc = carry
+                    (loss, metrics), grads = grads_of(state.params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                    )
+                    aux_acc = {k: aux_acc[k] + metrics[k] for k in aux_acc}
+                    return (g_acc, loss_acc + loss, aux_acc), None
+
+                aux0 = {"ce": jnp.zeros((), jnp.float32),
+                        "moe_aux_loss": jnp.zeros((), jnp.float32),
+                        "moe_z_loss": jnp.zeros((), jnp.float32)}
+                (grads, loss, aux), _ = lax_scan_unrollable(
+                    body, (zeros, jnp.zeros((), jnp.float32), aux0), mb_batch,
+                    unroll=cfg.scan_unroll,
+                )
+                grads = jax.tree.map(lambda g: g / m, grads)
+                loss = loss / m
+                metrics = {k: v / m for k, v in aux.items()}
+            new_params, new_opt, opt_metrics = opt.update(grads, state.opt, state.params)
+            metrics = {"loss": loss, **metrics, **opt_metrics}
+            return TrainState(new_params, new_opt), metrics
+
+    decls = model.decls()
+    pspecs = param_pspecs(decls, ctx)
+    state_pspecs = TrainState(
+        params=pspecs,
+        opt=AdamWState(
+            step=P(), m=pspecs, v=pspecs, master=pspecs if bf16_params else None
+        ),
+    )
+    abstract_p = abstract_params(
+        decls, dtype_override=jnp.bfloat16 if bf16_params else None
+    )
+    abstract_m = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, opt.moment_dtype), abstract_p
+    )
+    abstract_master = (
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), abstract_p)
+        if bf16_params
+        else None
+    )
+    abstract_state = TrainState(
+        params=abstract_p,
+        opt=AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=abstract_m,
+            v=jax.tree.map(lambda s: s, abstract_m),
+            master=abstract_master,
+        ),
+    )
+    in_specs = input_specs(cfg, shape)
+    b_pspecs = batch_pspecs(in_specs, ctx)
+
+    metrics_sh = None  # replicated by default
+    jit_fn = jax.jit(
+        train_step,
+        in_shardings=(_named(ctx, state_pspecs), _named(ctx, b_pspecs)),
+        out_shardings=(_named(ctx, state_pspecs), metrics_sh),
+        donate_argnums=(0,),
+    )
+    return jit_fn, (state_pspecs, b_pspecs), (abstract_state, in_specs)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardingCtx):
+    """Inference prefill: bf16 params, logits out (no loss/grad)."""
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        with sharding_ctx(ctx):
+            logits, _ = model.forward(params, batch)
+            return logits
+
+    decls = model.decls()
+    pspecs = param_pspecs(decls, ctx)
+    abstract_p = abstract_params(decls, dtype_override=jnp.bfloat16)
+    in_specs = input_specs(cfg, shape)
+    b_pspecs = batch_pspecs(in_specs, ctx)
+    logits_spec = spec_for(
+        ("batch", "seq", "vocab"),
+        (shape.global_batch, shape.seq_len, cfg.padded_vocab),
+        ctx.act_rules,
+        ctx.mesh_shape,
+    )
+    jit_fn = jax.jit(
+        prefill_step,
+        in_shardings=(_named(ctx, pspecs), _named(ctx, b_pspecs)),
+        out_shardings=NamedSharding(ctx.mesh, logits_spec),
+    )
+    return jit_fn, (pspecs, b_pspecs), (abstract_p, in_specs)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeSpec, ctx: ShardingCtx):
+    """serve_step: one new token against a seq_len-deep cache."""
+    model = build_model(cfg)
+    b = shape.global_batch
+
+    def serve_step(params, cache, tokens):
+        with sharding_ctx(ctx):
+            return model.decode_step(params, cache, tokens)
+
+    decls = model.decls()
+    pspecs = param_pspecs(decls, ctx)
+    abstract_p = abstract_params(decls, dtype_override=jnp.bfloat16)
+    cache_decls = model.cache_decls(b, shape.seq_len)
+    cache_pspecs = param_pspecs(cache_decls, _cache_ctx(ctx))
+    abstract_cache = abstract_params(cache_decls)
+    tok_spec = spec_for(("batch",), (b,), ctx.act_rules, ctx.mesh_shape)
+    logits_pspec = spec_for(
+        ("batch", "vocab"), (b, cfg.padded_vocab), ctx.act_rules, ctx.mesh_shape
+    )
+    jit_fn = jax.jit(
+        serve_step,
+        in_shardings=(
+            _named(ctx, pspecs),
+            _named(ctx, cache_pspecs),
+            NamedSharding(ctx.mesh, tok_spec),
+        ),
+        out_shardings=(
+            NamedSharding(ctx.mesh, logits_pspec),
+            _named(ctx, cache_pspecs),
+        ),
+        donate_argnums=(1,),
+    )
+    tok_abstract = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return jit_fn, (pspecs, cache_pspecs, tok_spec), (abstract_p, abstract_cache, tok_abstract)
+
+
+def _cache_ctx(ctx: ShardingCtx) -> ShardingCtx:
+    """Cache decls are declared with activation-style logical axes (batch,
+    cache_seq, ...) — shard them under the ACT rules."""
+    return ShardingCtx(mesh=ctx.mesh, param_rules=ctx.act_rules, act_rules=ctx.act_rules, log=ctx.log)

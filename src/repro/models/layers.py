@@ -1,0 +1,354 @@
+"""Transformer building blocks — pure-JAX, logical-axis-annotated, scan-friendly.
+
+Every block provides ``<block>_decls(cfg) -> {name: ParamDecl}`` and an apply
+function. Activations are annotated with logical axes via ``shard_act`` at block
+boundaries; params carry logical axes in their decls. Compute runs in
+``cfg.dtype`` (bf16) with fp32 master params and fp32 softmax/norm internals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard_act
+from .param import ParamDecl
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_decls(d_model: int, kind: str) -> Dict[str, ParamDecl]:
+    d = {"scale": ParamDecl((d_model,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        d["bias"] = ParamDecl((d_model,), ("embed",), init="zeros")
+    return d
+
+
+def apply_norm(p, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: Array, head_dim: int, theta: float) -> Tuple[Array, Array]:
+    """positions (...,) -> cos/sin (..., head_dim//2) fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (B, S, H, hd), positions (B, S) -> rotated x (same dtype)."""
+    head_dim = x.shape[-1]
+    cos, sin = _rope_angles(positions, head_dim, theta)  # (B, S, half)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array, positions3: Array, theta: float, sections: Tuple[int, int, int]
+) -> Array:
+    """Qwen2-VL M-RoPE. positions3 (B, S, 3) = (t, h, w) ids; ``sections`` split
+    head_dim//2 frequency bands among the three position streams. With
+    t==h==w (text) this reduces exactly to standard RoPE."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = positions3.astype(jnp.float32)  # (B, S, 3)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # (half,) static
+    pos_per_freq = jnp.take_along_axis(
+        pos, jnp.broadcast_to(sec_id, pos.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos_per_freq * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_decls(cfg) -> Dict[str, ParamDecl]:
+    hd = cfg.resolved_head_dim
+    d = {
+        "wq": ParamDecl((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDecl((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDecl((cfg.n_heads, hd), ("heads", "head_dim"), init="zeros")
+        d["bk"] = ParamDecl((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+        d["bv"] = ParamDecl((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+    return d
+
+
+def _qkv(p, x: Array, cfg) -> Tuple[Array, Array, Array]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _heads_unshardable(h: int, kv: int) -> bool:
+    """True iff neither q-heads nor kv-heads can take the 'model' axis — the
+    case where unconstrained attention replicates the full score computation
+    on every model shard (qwen2-vl: 12H/2KV; whisper: 20H/20KV on 16-way)."""
+    from repro.parallel.sharding import current_ctx
+
+    ctx = current_ctx()
+    if ctx is None:
+        return False
+    tp = ctx.mesh_shape.get("model", 1)
+    return tp > 1 and h % tp != 0 and kv % tp != 0
+
+
+def _sdpa(
+    q: Array,  # (B, Sq, H, hd)
+    k: Array,  # (B, Sk, KV, hd)
+    v: Array,  # (B, Sk, KV, hd)
+    *,
+    causal: bool,
+    window: int = 0,  # >0: sliding-window
+    q_offset: Any = 0,  # absolute position of q[0] (int or traced scalar)
+    kv_valid: Optional[Array] = None,  # (B, Sk) bool — valid cache slots
+) -> Array:
+    """Grouped-query scaled dot-product attention, fp32 softmax."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    if _heads_unshardable(h, kv):
+        # sequence-parallel fallback ONLY when no head dim divides the model
+        # axis (annotating shardable-head archs was measured to FIGHT natural
+        # propagation and add reshard traffic — EXPERIMENTS.md §Perf H2).
+        scores = shard_act(scores, ("batch", "kv_heads", "heads", "seq_q", None))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qpos = q_offset + jnp.arange(sq)[:, None]  # (sq, 1)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_valid is not None:
+        scores = jnp.where(kv_valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def sdpa_chunked(
+    q: Array, k: Array, v: Array, *, causal: bool, window: int, q_chunk: int,
+    unroll: bool = False, remat: bool = True,
+) -> Array:
+    """Query-chunked attention: scan over q chunks so the score matrix never
+    exceeds (B, chunk, H, Sk). Used for long-sequence prefill/train."""
+    b, s, h, hd = q.shape
+    if s % q_chunk != 0 or s <= q_chunk:
+        return _sdpa(q, k, v, causal=causal, window=window)
+    nchunk = s // q_chunk
+    qs = q.reshape(b, nchunk, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        i, qc = args
+        out = _sdpa(qc, k, v, causal=causal, window=window, q_offset=i * q_chunk)
+        return carry, out
+
+    if remat:
+        body = jax.checkpoint(body)  # don't save per-chunk probs for bwd
+    _, outs = lax.scan(body, None, (jnp.arange(nchunk), qs), unroll=True if unroll else 1)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def apply_attention(
+    p,
+    x: Array,
+    cfg,
+    positions: Array,  # (B, S) or (B, S, 3) for mrope
+    q_chunk: int = 0,
+) -> Array:
+    """Full self-attention block body (no norm/residual)."""
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+    v = shard_act(v, ("batch", "seq", "kv_heads", None))
+    window = cfg.window if cfg.attention == "swa" else 0
+    if q_chunk and x.shape[1] > q_chunk:
+        o = sdpa_chunked(q, k, v, causal=cfg.causal, window=window, q_chunk=q_chunk,
+                         unroll=cfg.scan_unroll, remat=cfg.remat)
+    else:
+        o = _sdpa(q, k, v, causal=cfg.causal, window=window)
+    o = shard_act(o, ("batch", "seq", "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def apply_cross_attention(p, x: Array, enc: Array, cfg) -> Array:
+    """Encoder-decoder cross attention (whisper). q from x, k/v from enc."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bfd,dhk->bfhk", enc, p["wk"].astype(dt))
+    v = jnp.einsum("bfd,dhk->bfhk", enc, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    o = _sdpa(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+# --- decode path (single new token against a cache) ------------------------
+
+
+def init_cache_decls(cfg, batch: int, cache_len: int) -> Dict[str, ParamDecl]:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+    return {
+        "k": ParamDecl(shape, axes, init="zeros", dtype=jnp.bfloat16),
+        "v": ParamDecl(shape, axes, init="zeros", dtype=jnp.bfloat16),
+    }
+
+
+def decode_attention(
+    p,
+    x: Array,  # (B, 1, D)
+    cfg,
+    k_cache: Array,  # (B, Sc, KV, hd) — this layer's cache
+    v_cache: Array,
+    pos: Array,  # (B,) int32 — index of the new token
+) -> Tuple[Array, Array, Array]:
+    """One-token attention; returns (out, new_k_cache, new_v_cache)."""
+    b, _, d = x.shape
+    sc = k_cache.shape[1]
+    q, k, v = _qkv(p, x, cfg)  # (B, 1, H/KV, hd)
+    posb = pos[:, None]  # (B, 1)
+    if cfg.pos == "rope":
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        pos3 = jnp.broadcast_to(posb[..., None], (b, 1, 3))
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    # ring-buffer write for SWA, linear write otherwise
+    slot = (pos % sc) if cfg.attention == "swa" else pos  # (B,)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    kpos = jnp.arange(sc)[None, :]
+    if cfg.attention == "swa":
+        # slots hold positions within the last `sc`; valid = written at least once
+        valid = kpos < jnp.minimum(pos[:, None] + 1, sc)
+    else:
+        valid = kpos <= pos[:, None]
+    o = _sdpa(q, k_cache, v_cache, causal=False, kv_valid=valid)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_decls(cfg, d_ff: Optional[int] = None) -> Dict[str, ParamDecl]:
+    ff = d_ff or cfg.d_ff
+    d = {
+        "w_up": ParamDecl((cfg.d_model, ff), ("embed", "mlp")),
+        "w_down": ParamDecl((ff, cfg.d_model), ("mlp", "embed")),
+    }
+    if cfg.act == "silu":  # swiglu
+        d["w_gate"] = ParamDecl((cfg.d_model, ff), ("embed", "mlp"))
+    return d
+
+
+def apply_mlp(p, x: Array, cfg) -> Array:
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    if cfg.act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_decls(cfg) -> Dict[str, ParamDecl]:
+    # 'embed_table' (not FSDP'd): gathers over a table whose feature dim is
+    # sharded over 'data' force involuntary full-remat reshards in SPMD —
+    # vocab-only sharding keeps the gather local-ish (mask + psum over model).
+    v = cfg.padded_vocab
+    d = {"tok": ParamDecl((v, cfg.d_model), ("vocab", "embed_table"), init="embed")}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDecl((cfg.d_model, v), ("embed_table", "vocab"))
+    if cfg.pos == "learned":
+        d["pos"] = ParamDecl((cfg.max_pos, cfg.d_model), (None, "embed_table"), init="embed")
+    return d
+
+
+def apply_embed(p, tokens: Array, cfg, positions: Optional[Array] = None) -> Array:
+    x = jnp.take(p["tok"].astype(getattr(jnp, cfg.dtype)), tokens, axis=0)
+    if cfg.pos == "learned":
+        x = x + jnp.take(p["pos"].astype(x.dtype), positions, axis=0)
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def apply_unembed(p, x: Array, cfg) -> Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(dt))
+    return shard_act(logits, ("batch", "seq", "vocab"))

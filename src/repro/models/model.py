@@ -1,0 +1,62 @@
+"""build_model(cfg) — facade constructor + input spec builder."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from .transformer import Model
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train/prefill: token batch (+ stub modality inputs).
+    decode: one new token per sequence (cache specs come from the model).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.is_decode:
+        specs = {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    if cfg.family == "encdec":
+        # conv/mel frontend is a stub: precomputed frame embeddings
+        specs["enc_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.pos == "mrope":
+        # vision frontend stub: 3-component (t,h,w) position ids
+        specs["pos3"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+    return specs
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    """Concrete random inputs matching input_specs (smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        key, k = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            if name == "pos3":
+                b, s, _ = spec.shape
+                pos = jnp.broadcast_to(jnp.arange(s)[None, :, None], spec.shape)
+                out[name] = pos.astype(jnp.int32)
+            else:
+                out[name] = jax.random.randint(k, spec.shape, 0, cfg.vocab, jnp.int32)
+        elif name == "loss_mask":
+            out[name] = jnp.ones(spec.shape, spec.dtype)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+    return out

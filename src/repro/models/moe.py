@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer — top-k routing, capacity-bounded sort-based dispatch.
+
+Dispatch is the static-shape sorted-scatter formulation (no (T, E, C) one-hot
+einsum, which would be petabytes at these scales):
+
+  1. route: top-k expert ids + renormalized gates per token
+  2. group tokens (default: one group per sequence so the group dim shards over
+     ('pod','data') like the batch; decode uses a single group)
+  3. within each group, stable-sort the t·k slots by expert id, take the first
+     C = ceil(t·k/E · capacity_factor) per expert, scatter into (E, C, D)
+     buffers (overflow slots drop — standard capacity dropping)
+  4. batched expert FFN: einsum over (group, E, C, D) with weights sharded on
+     the 'expert' → 'model' axis (expert parallelism; XLA inserts the
+     all-to-all at the group→expert reshard)
+  5. combine: gather back to slots, weight by gates, segment-sum per token
+
+Aux quantities (load-balance loss, router z-loss) are returned for training.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard_act
+from .param import ParamDecl
+
+Array = jax.Array
+
+
+def moe_decls(cfg) -> Dict[str, ParamDecl]:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    decls = {
+        "router": ParamDecl((d, e), ("embed", "expert")),
+        "w_up": ParamDecl((e, d, f), ("expert", "embed", "expert_mlp")),
+        "w_down": ParamDecl((e, f, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.act == "silu":
+        decls["w_gate"] = ParamDecl((e, d, f), ("expert", "embed", "expert_mlp"))
+    return decls
+
+
+def _capacity(tokens_per_group: int, k: int, n_experts: int, factor: float) -> int:
+    return max(1, int(-(-tokens_per_group * k * factor // n_experts)))
+
+
+def apply_moe(
+    p,
+    x: Array,  # (B, S, D)
+    cfg,
+    capacity_factor: float = 1.25,
+) -> Tuple[Array, Dict[str, Array]]:
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+
+    # one group per sequence (groups shard over batch axes); decode: one group
+    g = b if s > 1 else 1
+    tg = (b * s) // g
+    xg = x.reshape(g, tg, d)
+    cap = _capacity(tg, k, e, capacity_factor)
+
+    # -- route (fp32) --------------------------------------------------------
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (g, tg, e)
+    gate_vals, expert_idx = lax.top_k(probs, k)  # (g, tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux losses (Switch-style load balance + z-loss)
+    me = jnp.mean(probs, axis=1)  # (g, e)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=2), axis=1
+    )  # (g, e) fraction routed
+    aux_loss = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # -- dispatch: sort slots by expert, position-in-expert, capacity drop ----
+    # NOTE (EXPERIMENTS.md §Perf#7): the scatter below SPMD-lowers to
+    # replicate + all-reduce over 'model' (~148 GB/layer on qwen3-moe). A
+    # take-based inversion (gather xe[e,c] = x[token_of_slot]) was measured
+    # and made total wire 2.3× WORSE — the scatter reappears transposed in
+    # the backward pass. The structural fix (explicit shard_map all_to_all
+    # expert parallelism) is the identified next step; see DESIGN.md §5.
+    tk = tg * k
+    slot_e = expert_idx.reshape(g, tk)  # (g, tk)
+    slot_gate = gate_vals.reshape(g, tk).astype(dt)
+    slot_tok = jnp.broadcast_to(jnp.arange(tg)[:, None], (tg, k)).reshape(tk)
+    slot_tok = jnp.broadcast_to(slot_tok, (g, tk))
+
+    order = jnp.argsort(slot_e, axis=-1, stable=True)  # (g, tk)
+    se = jnp.take_along_axis(slot_e, order, axis=-1)
+    stok = jnp.take_along_axis(slot_tok, order, axis=-1)
+    sgate = jnp.take_along_axis(slot_gate, order, axis=-1)
+    # position of each sorted slot within its expert run
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)  # (g, e)
+    pos = jnp.arange(tk)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < cap
+    dest = jnp.where(keep, se * cap + pos, e * cap)  # out-of-range == drop
+
+    gathered_x = jnp.take_along_axis(xg, stok[..., None], axis=1)  # (g, tk, d)
+    buf = jnp.zeros((g, e * cap, d), dt)
+    buf = jax.vmap(lambda bf, dst, val: bf.at[dst].set(val, mode="drop"))(
+        buf, dest, gathered_x
+    )
+    xe = buf.reshape(g, e, cap, d)
+    xe = shard_act(xe, ("batch", "expert", "expert_cap", "embed"))
+
+    # -- expert FFN (batched over experts; expert dim sharded over 'model') ---
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    if cfg.act == "silu":
+        gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    ye = shard_act(ye, ("batch", "expert", "expert_cap", "embed"))
+
+    # -- combine --------------------------------------------------------------
+    yflat = ye.reshape(g, e * cap, d)
+    slot_y = jax.vmap(lambda yf, dst: yf.at[dst, :].get(mode="fill", fill_value=0))(
+        yflat, jnp.where(keep, dest, e * cap - 1)
+    )  # (g, tk, d)
+    slot_y = slot_y * (sgate * keep.astype(dt))[..., None]
+    out = jnp.zeros((g, tg, d), dt)
+    out = jax.vmap(lambda o, tok, val: o.at[tok].add(val))(out, stok, slot_y)
+
+    aux = {"moe_aux_loss": aux_loss, "moe_z_loss": z_loss}
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,77 @@
+"""Parameter declaration system — shapes + logical axes declared once.
+
+Every model declares its parameters as a pytree of :class:`ParamDecl`; from the
+same declaration we derive
+  - concrete initialized params           (training)
+  - ``ShapeDtypeStruct`` abstract params  (multi-pod dry-run — no allocation)
+  - ``PartitionSpec`` trees               (via `repro.parallel.sharding` rules)
+
+Layer stacks declare a leading ``layers`` axis and are consumed by
+``lax.scan`` so HLO size is depth-independent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = no sharding)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override for 'normal'
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _tree_map_decl(f: Callable, tree):
+    return jax.tree.map(f, tree, is_leaf=is_decl)
+
+
+def abstract_params(decls, dtype_override=None):
+    """ShapeDtypeStruct tree — used by the dry-run (no device allocation)."""
+    return _tree_map_decl(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype_override or d.dtype), decls
+    )
+
+
+def init_params(key: jax.Array, decls, dtype_override=None):
+    flat, treedef = jax.tree.flatten(decls, is_leaf=is_decl)
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for k, d in zip(keys, flat):
+        dtype = dtype_override or d.dtype
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            if d.init == "embed":
+                scale = d.scale if d.scale is not None else 0.02
+            arr = (scale * jax.random.normal(k, d.shape)).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def logical_axes(decls):
+    """Tree of logical-axis tuples, same structure as params."""
+    return _tree_map_decl(lambda d: d.axes, decls)
+
+
+def count_params(decls) -> int:
+    flat, _ = jax.tree.flatten(decls, is_leaf=is_decl)
+    return int(sum(int(np.prod(d.shape)) for d in flat))

@@ -1,0 +1,370 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba2 (SSD).
+
+Both are linear-recurrence layers trained in *chunked parallel* form — within a
+chunk the recurrence unrolls into dense matmuls (MXU work), across chunks a
+``lax.scan`` carries the state. The chunked forms are exact (not approximations)
+and numerically safe: all decay exponentials are of non-positive arguments.
+
+RWKV6 recurrence (per head; K/V = head dims, w data-dependent per channel):
+
+    S_t = Diag(w_t) S_{t-1} + k_t v_tᵀ
+    o_t = r_tᵀ (S_{t-1} + Diag(u) k_t v_tᵀ)
+
+Mamba2 / SSD (per head; scalar data-dependent decay a_t):
+
+    h_t = a_t h_{t-1} + B_t (dt_t · x_t)ᵀ
+    y_t = C_tᵀ h_t + D · x_t
+
+Decode carries (state, token-shift x / conv tail) per layer — O(1) per token,
+which is why these archs run the ``long_500k`` shape (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard_act
+from .param import ParamDecl
+
+Array = jax.Array
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+def rwkv6_decls(cfg) -> Dict[str, ParamDecl]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    lora = cfg.ssm_lora  # low-rank size for the data-dependent decay
+    return {
+        # time-mix lerp coefficients (first-order token-shift mixing)
+        "mu_r": ParamDecl((d,), ("embed",), init="zeros"),
+        "mu_k": ParamDecl((d,), ("embed",), init="zeros"),
+        "mu_v": ParamDecl((d,), ("embed",), init="zeros"),
+        "mu_g": ParamDecl((d,), ("embed",), init="zeros"),
+        "mu_w": ParamDecl((d,), ("embed",), init="zeros"),
+        "w_r": ParamDecl((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_k": ParamDecl((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_v": ParamDecl((d, h, hd), ("embed", "heads", "head_dim")),
+        "w_g": ParamDecl((d, h, hd), ("embed", "heads", "head_dim")),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))  (Finch)
+        "decay_w0": ParamDecl((h, hd), ("heads", "head_dim"), init="zeros"),
+        "decay_a": ParamDecl((d, lora), ("embed", None)),
+        "decay_b": ParamDecl((lora, h, hd), (None, "heads", "head_dim")),
+        "bonus_u": ParamDecl((h, hd), ("heads", "head_dim"), init="zeros"),
+        "ln_out_scale": ParamDecl((h, hd), ("heads", "head_dim"), init="ones"),
+        "w_o": ParamDecl((h, hd, d), ("heads", "head_dim", "embed")),
+        # channel-mix
+        "mu_ck": ParamDecl((d,), ("embed",), init="zeros"),
+        "mu_cr": ParamDecl((d,), ("embed",), init="zeros"),
+        "w_ck": ParamDecl((d, cfg.d_ff), ("embed", "mlp")),
+        "w_cv": ParamDecl((cfg.d_ff, d), ("mlp", "embed")),
+        "w_cr": ParamDecl((d, d), ("embed", None)),
+    }
+
+
+def _token_shift(x: Array, x_prev: Array) -> Array:
+    """(B,S,D) -> previous-token tensor; x_prev (B,D) seeds position 0."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _wkv_chunk(r, k, v, logw, u, s0):
+    """Exact chunked WKV. r/k/v (B,H,L,hd), logw (B,H,L,hd) ≤ 0, s0 (B,H,hd,hd).
+    Returns (o (B,H,L,hd), s_end)."""
+    f32 = jnp.float32
+    r, k, v, logw = (t.astype(f32) for t in (r, k, v, logw))
+    c = jnp.cumsum(logw, axis=2)  # (B,H,L,hd) cumulative log-decay, ≤ 0
+    c_prev = c - logw  # c_{i-1} (exclusive)
+    l = r.shape[2]
+    # intra-chunk: A[i,j] = Σ_kdim r_i k_j exp(c_{i-1} - c_j), strictly j < i
+    # computed via (L, L, hd) differences — all exponents ≤ 0, no overflow.
+    diff = c_prev[:, :, :, None, :] - c[:, :, None, :, :]  # (B,H,L,L,hd)
+    tri = jnp.tril(jnp.ones((l, l), bool), -1)[None, None, :, :, None]
+    amat = jnp.sum(
+        jnp.where(tri, r[:, :, :, None, :] * k[:, :, None, :, :] * jnp.exp(diff), 0.0),
+        axis=-1,
+    )  # (B,H,L,L)
+    o_intra = jnp.einsum("bhij,bhjv->bhiv", amat, v)
+    # current-token bonus: (r_i ⊙ u ⊙ k_i)·v_i
+    bonus = jnp.sum(r * u[None, :, None, :].astype(f32) * k, axis=-1, keepdims=True) * v
+    # inter-chunk: o_i += (r_i ⊙ exp(c_{i-1})) S_0
+    r_dec = r * jnp.exp(c_prev)
+    o_inter = jnp.einsum("bhlk,bhkv->bhlv", r_dec, s0)
+    # state to next chunk: S = Diag(exp(c_L)) S_0 + Σ_i (k_i exp(c_L - c_i)) v_iᵀ
+    c_last = c[:, :, -1:, :]  # (B,H,1,hd)
+    k_dec = k * jnp.exp(c_last - c)
+    s_end = jnp.exp(c_last[:, :, 0, :, None]) * s0 + jnp.einsum(
+        "bhlk,bhlv->bhkv", k_dec, v
+    )
+    return o_intra + o_inter + bonus, s_end
+
+
+def rwkv6_mix(p, x: Array, cfg, x_prev: Array, s0: Array, chunk: int = 64):
+    """Time-mix over a sequence. x (B,S,D); x_prev (B,D); s0 (B,H,hd,hd).
+    Returns (out (B,S,D), x_last (B,D), s_end)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    dt = x.dtype
+    xx = _token_shift(x, x_prev)
+    xr = _lerp(x, xx, p["mu_r"])
+    xk = _lerp(x, xx, p["mu_k"])
+    xv = _lerp(x, xx, p["mu_v"])
+    xg = _lerp(x, xx, p["mu_g"])
+    xw = _lerp(x, xx, p["mu_w"])
+    r = jnp.einsum("bsd,dhk->bhsk", xr, p["w_r"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", xk, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", xv, p["w_v"].astype(dt))
+    g = jnp.einsum("bsd,dhk->bhsk", xg, p["w_g"].astype(dt))
+    # data-dependent decay (fp32, clipped to keep exp(-exp(.)) sane)
+    lo = jnp.tanh(
+        jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32), p["decay_a"].astype(jnp.float32))
+    )
+    wraw = p["decay_w0"].astype(jnp.float32)[None, None] + jnp.einsum(
+        "bsl,lhk->bshk", lo, p["decay_b"].astype(jnp.float32)
+    )
+    logw = -jnp.exp(jnp.clip(wraw, -8.0, 4.0))  # ≤ 0, per (B,S,H,hd)
+    logw = jnp.transpose(logw, (0, 2, 1, 3))  # (B,H,S,hd)
+
+    if s % chunk != 0:
+        chunk = s  # single chunk fallback (smoke-test sizes)
+    nc = s // chunk
+
+    def to_chunks(t):  # (B,H,S,hd) -> (nc,B,H,L,hd)
+        return t.reshape(b, h, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    u = p["bonus_u"]
+
+    def body(state, inp):
+        rc, kc, vc, lwc = inp
+        o, s_next = _wkv_chunk(rc, kc, vc, lwc, u, state)
+        return s_next, o
+
+    if cfg.remat:
+        # without this, scan's backward saves each chunk's full linearization
+        # residuals (incl. the (B,H,L,L,hd) decay tensor) — O(S·L·hd) memory
+        body = jax.checkpoint(body)
+
+    s_end, o_chunks = lax.scan(
+        body,
+        s0.astype(jnp.float32),
+        (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw)),
+        unroll=True if cfg.scan_unroll else 1,
+    )
+    o = o_chunks.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    # group-norm per head then gate
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * lax.rsqrt(var + 1e-5) * p["ln_out_scale"].astype(jnp.float32)[None, :, None, :]
+    o = (o.astype(dt) * jax.nn.silu(g.astype(jnp.float32)).astype(dt))
+    o = jnp.transpose(o, (0, 2, 1, 3))  # (B,S,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["w_o"].astype(dt))
+    return out, x[:, -1, :], s_end
+
+
+def rwkv6_channel_mix(p, x: Array, cfg, x_prev: Array):
+    dt = x.dtype
+    xx = _token_shift(x, x_prev)
+    xk = _lerp(x, xx, p["mu_ck"])
+    xr = _lerp(x, xx, p["mu_cr"])
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_ck"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = shard_act(kk, ("batch", "seq", "mlp"))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_cv"].astype(dt))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr.astype(jnp.float32), p["w_cr"].astype(jnp.float32))
+    ).astype(dt)
+    return rr * vv, x[:, -1, :]
+
+
+def rwkv6_decode_step(p, x: Array, cfg, x_prev_t, x_prev_c, s0):
+    """One token. x (B,D). States: x_prev_* (B,D), s0 (B,H,hd,hd) fp32."""
+    b, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    dt = x.dtype
+    f32 = jnp.float32
+    xr = _lerp(x, x_prev_t, p["mu_r"])
+    xk = _lerp(x, x_prev_t, p["mu_k"])
+    xv = _lerp(x, x_prev_t, p["mu_v"])
+    xg = _lerp(x, x_prev_t, p["mu_g"])
+    xw = _lerp(x, x_prev_t, p["mu_w"])
+    r = jnp.einsum("bd,dhk->bhk", xr, p["w_r"].astype(dt)).astype(f32)
+    k = jnp.einsum("bd,dhk->bhk", xk, p["w_k"].astype(dt)).astype(f32)
+    v = jnp.einsum("bd,dhk->bhk", xv, p["w_v"].astype(dt)).astype(f32)
+    g = jnp.einsum("bd,dhk->bhk", xg, p["w_g"].astype(dt))
+    lo = jnp.tanh(jnp.einsum("bd,dl->bl", xw.astype(f32), p["decay_a"].astype(f32)))
+    wraw = p["decay_w0"].astype(f32)[None] + jnp.einsum(
+        "bl,lhk->bhk", lo, p["decay_b"].astype(f32)
+    )
+    w = jnp.exp(-jnp.exp(jnp.clip(wraw, -8.0, 4.0)))  # (B,H,hd)
+    u = p["bonus_u"].astype(f32)[None]
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,hd_k,hd_v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, s0 + u[..., None] * kv)
+    s_new = w[..., None] * s0 + kv
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * lax.rsqrt(var + 1e-5) * p["ln_out_scale"].astype(f32)[None]
+    o = o.astype(dt) * jax.nn.silu(g.astype(f32)).astype(dt)
+    out = jnp.einsum("bhk,hkd->bd", o, p["w_o"].astype(dt))
+    return out, x, s_new
+
+
+def rwkv6_channel_mix_step(p, x: Array, cfg, x_prev):
+    dt = x.dtype
+    xk = _lerp(x, x_prev, p["mu_ck"])
+    xr = _lerp(x, x_prev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, p["w_ck"].astype(dt))))
+    vv = jnp.einsum("bf,fd->bd", kk, p["w_cv"].astype(dt))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bd,de->be", xr.astype(jnp.float32), p["w_cr"].astype(jnp.float32))
+    ).astype(dt)
+    return rr * vv, x
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def mamba2_decls(cfg) -> Dict[str, ParamDecl]:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner  # 2 * d_model by default
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    conv = cfg.ssm_conv
+    cdim = di + 2 * n
+    return {
+        "w_in": ParamDecl((d, 2 * di + 2 * n + nh), ("embed", "mlp")),
+        "conv_w": ParamDecl((conv, cdim), ("conv", "mlp"), init="normal", scale=0.5),
+        "conv_b": ParamDecl((cdim,), ("mlp",), init="zeros"),
+        "a_log": ParamDecl((nh,), ("heads",), init="zeros"),
+        "dt_bias": ParamDecl((nh,), ("heads",), init="zeros"),
+        "skip_d": ParamDecl((nh,), ("heads",), init="ones"),
+        "norm_scale": ParamDecl((di,), ("mlp",), init="ones"),
+        "w_out": ParamDecl((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Array) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x (B,S,C), w (K,C), tail (B,K-1,C) from the
+    previous segment. Returns (y (B,S,C), new_tail)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    y = jax.nn.silu(y + b[None, None, :])
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else tail
+    return y.astype(x.dtype), new_tail
+
+
+def _ssd_chunk(xh, bmat, cmat, loga, h0):
+    """Exact chunked SSD (scalar per-head decay).
+    xh (B,H,L,hd) = dt·x; bmat/cmat (B,L,N); loga (B,H,L) ≤ 0; h0 (B,H,N,hd)."""
+    f32 = jnp.float32
+    xh, bmat, cmat, loga = (t.astype(f32) for t in (xh, bmat, cmat, loga))
+    l = xh.shape[2]
+    ca = jnp.cumsum(loga, axis=-1)  # (B,H,L)
+    ca_prev = ca - loga
+    # intra: y_i = Σ_{j<=i} exp(ca_i - ca_j) (C_i·B_j) xh_j
+    dmat = ca[:, :, :, None] - ca[:, :, None, :]  # (B,H,L,L) ≤ 0 on tril
+    tri = jnp.tril(jnp.ones((l, l), bool))[None, None]
+    cb = jnp.einsum("bin,bjn->bij", cmat, bmat)[:, None]  # (B,1,L,L)
+    amat = jnp.where(tri, jnp.exp(dmat) * cb, 0.0)  # (B,H,L,L)
+    y_intra = jnp.einsum("bhij,bhjv->bhiv", amat, xh)
+    # inter: y_i += exp(ca_i) C_i · h0
+    y_inter = jnp.einsum("bin,bhnv,bhi->bhiv", cmat, h0, jnp.exp(ca))
+    # state: h_L = exp(ca_L) h0 + Σ_j exp(ca_L - ca_j) B_j xh_jᵀ
+    ca_last = ca[:, :, -1:]
+    bw = jnp.exp(ca_last - ca)[:, :, :, None] * bmat[:, None]  # (B,H,L,N)
+    h_end = jnp.exp(ca_last)[..., None] * h0 + jnp.einsum("bhln,bhlv->bhnv", bw, xh)
+    return y_intra + y_inter, h_end
+
+
+def mamba2_mix(p, x: Array, cfg, conv_tail: Array, h0: Array, chunk: int = 64):
+    """x (B,S,D); conv_tail (B,K-1,C); h0 (B,H,N,hd) fp32.
+    Returns (out, new_tail, h_end)."""
+    b, s, d = x.shape
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    dt = x.dtype
+    f32 = jnp.float32
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt))
+    z, xin, bc, dtr = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)  # (B,S,di+2n)
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_tail)
+    xc, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt_a = jax.nn.softplus(dtr.astype(f32) + p["dt_bias"].astype(f32)[None, None])
+    loga = -jnp.exp(p["a_log"].astype(f32))[None, None] * dt_a  # (B,S,H) ≤ 0
+    xh = xc.reshape(b, s, nh, hd).astype(f32) * dt_a[..., None]  # dt·x
+    xh = jnp.transpose(xh, (0, 2, 1, 3))  # (B,H,S,hd)
+    loga_t = jnp.transpose(loga, (0, 2, 1))  # (B,H,S)
+
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+
+    def body(state, inp):
+        xc_, b_, c_, la_ = inp
+        y, h_next = _ssd_chunk(xc_, b_, c_, la_, state)
+        return h_next, y
+
+    if cfg.remat:
+        body = jax.checkpoint(body)  # see rwkv6_mix
+
+    xs = xh.reshape(b, nh, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    bs_ = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3).astype(f32)
+    cs_ = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3).astype(f32)
+    las = loga_t.reshape(b, nh, nc, chunk).transpose(2, 0, 1, 3)
+    h_end, ys = lax.scan(body, h0.astype(f32), (xs, bs_, cs_, las),
+                         unroll=True if cfg.scan_unroll else 1)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, nh, s, hd)
+    y = y + p["skip_d"].astype(f32)[None, :, None, None] * jnp.transpose(
+        xc.reshape(b, s, nh, hd), (0, 2, 1, 3)
+    ).astype(f32)
+    y = jnp.transpose(y, (0, 2, 1, 3)).reshape(b, s, di)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z.astype(f32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * lax.rsqrt(ms + 1e-6) * p["norm_scale"].astype(f32)[None, None]).astype(dt)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt))
+    return out, new_tail, h_end
+
+
+def mamba2_decode_step(p, x: Array, cfg, conv_tail: Array, h0: Array):
+    """One token. x (B,D); conv_tail (B,K-1,C); h0 (B,H,N,hd)."""
+    b, d = x.shape
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    dt = x.dtype
+    f32 = jnp.float32
+    zxbcdt = jnp.einsum("bd,de->be", x, p["w_in"].astype(dt))
+    z, xin, bc, dtr = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)[:, None, :]  # (B,1,C)
+    y1, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_tail)
+    xc, bmat, cmat = jnp.split(y1[:, 0], [di, di + n], axis=-1)
+    dt_a = jax.nn.softplus(dtr.astype(f32) + p["dt_bias"].astype(f32)[None])
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(f32))[None] * dt_a)  # (B,H)
+    xh = xc.reshape(b, nh, hd).astype(f32) * dt_a[..., None]
+    h_new = a[..., None, None] * h0 + bmat.astype(f32)[:, None, :, None] * xh[:, :, None, :]
+    y = jnp.einsum("bn,bhnv->bhv", cmat.astype(f32), h_new)
+    y = y + p["skip_d"].astype(f32)[None, :, None] * xc.reshape(b, nh, hd).astype(f32)
+    y = y.reshape(b, di) * jax.nn.silu(z.astype(f32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * lax.rsqrt(ms + 1e-6) * p["norm_scale"].astype(f32)[None]).astype(dt)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"].astype(dt))
+    return out, new_tail, h_new

@@ -1,0 +1,544 @@
+"""Model assembly for all assigned families.
+
+One :class:`Model` facade per config with a uniform API:
+
+    decls()                      parameter declarations (shapes + logical axes)
+    init(key)                    concrete params
+    forward(params, batch)       logits  (train / prefill path)
+    loss(params, batch)          (scalar, metrics)  — next-token CE + MoE aux
+    cache_decls(batch, cache_len)  decode-state declarations
+    init_cache(batch, cache_len)   zeroed decode state
+    decode_step(params, cache, tokens, pos[, extras]) -> (logits, cache)
+
+Layer stacks are ``lax.scan`` over stacked params (HLO size depth-independent);
+``cfg.remat`` wraps the scanned body in ``jax.checkpoint``. Families:
+
+  dense | moe | vlm   pre-norm GQA attention + (SwiGLU MLP | MoE)
+  ssm (rwkv6)         time-mix + channel-mix, no attention
+  hybrid (zamba2)     mamba2 stack with a SHARED attention+MLP block applied
+                      every ``attn_every`` layers (own KV cache per invocation)
+  encdec (whisper)    bidirectional encoder over stub frame embeddings +
+                      causal decoder with cross-attention
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard_act
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from .param import ParamDecl, abstract_params, init_params, is_decl
+
+Array = jax.Array
+
+
+def stack_decls(decls, n: int):
+    return jax.tree.map(
+        lambda d: ParamDecl((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale, d.dtype),
+        decls,
+        is_leaf=is_decl,
+    )
+
+
+def _zero_aux() -> Dict[str, Array]:
+    return {
+        "moe_aux_loss": jnp.zeros((), jnp.float32),
+        "moe_z_loss": jnp.zeros((), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-family decoder blocks (train/prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block_decls(cfg):
+    d = {
+        "norm1": L.norm_decls(cfg.d_model, cfg.norm),
+        "attn": L.attention_decls(cfg),
+        "norm2": L.norm_decls(cfg.d_model, cfg.norm),
+    }
+    if cfg.n_experts:
+        d["moe"] = M.moe_decls(cfg)
+    else:
+        d["mlp"] = L.mlp_decls(cfg)
+    return d
+
+
+def _dense_block(p, x, cfg, positions, aux):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    x = x + L.apply_attention(p["attn"], h, cfg, positions, q_chunk=cfg.q_chunk)
+    h = L.apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.n_experts:
+        y, a = M.apply_moe(p["moe"], h, cfg, cfg.capacity_factor)
+        aux = {k: aux[k] + a[k] for k in aux}
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg)
+    out = shard_act(x + y, ("batch", "seq_resid", "embed"))
+    return out, aux
+
+
+def _rwkv_block_decls(cfg):
+    return {
+        "norm1": L.norm_decls(cfg.d_model, cfg.norm),
+        "time": S.rwkv6_decls(cfg),
+        "norm2": L.norm_decls(cfg.d_model, cfg.norm),
+    }
+
+
+def _rwkv_block(p, x, cfg, states):
+    x_prev_t, x_prev_c, s0 = states
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    y, x_last_t, s_end = S.rwkv6_mix(p["time"], h, cfg, x_prev_t, s0, cfg.ssm_chunk)
+    x = x + y
+    h = L.apply_norm(p["norm2"], x, cfg.norm)
+    y, x_last_c = S.rwkv6_channel_mix(p["time"], h, cfg, x_prev_c)
+    out = shard_act(x + y, ("batch", "seq_resid", "embed"))
+    return out, (x_last_t, x_last_c, s_end)
+
+
+def _mamba_block_decls(cfg):
+    return {
+        "norm1": L.norm_decls(cfg.d_model, cfg.norm),
+        "mamba": S.mamba2_decls(cfg),
+    }
+
+
+def _mamba_block(p, x, cfg, states):
+    conv_tail, h0 = states
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    y, tail, h_end = S.mamba2_mix(p["mamba"], h, cfg, conv_tail, h0, cfg.ssm_chunk)
+    out = shard_act(x + y, ("batch", "seq_resid", "embed"))
+    return out, (tail, h_end)
+
+
+def _shared_attn_decls(cfg):
+    return {
+        "norm1": L.norm_decls(cfg.d_model, cfg.norm),
+        "attn": L.attention_decls(cfg),
+        "norm2": L.norm_decls(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_decls(cfg),
+    }
+
+
+def _shared_attn_block(p, x, cfg, positions):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    x = x + L.apply_attention(p["attn"], h, cfg, positions, q_chunk=cfg.q_chunk)
+    h = L.apply_norm(p["norm2"], x, cfg.norm)
+    return shard_act(x + L.apply_mlp(p["mlp"], h, cfg), ("batch", "seq_resid", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+
+    # ----- declarations ----------------------------------------------------
+
+    def decls(self):
+        cfg = self.cfg
+        out: Dict[str, Any] = {"embed": L.embed_decls(cfg)}
+        if cfg.family in ("dense", "moe", "vlm"):
+            out["layers"] = stack_decls(_dense_block_decls(cfg), cfg.n_layers)
+        elif cfg.family == "ssm":
+            out["layers"] = stack_decls(_rwkv_block_decls(cfg), cfg.n_layers)
+        elif cfg.family == "hybrid":
+            out["layers"] = stack_decls(_mamba_block_decls(cfg), cfg.n_layers)
+            out["shared_attn"] = _shared_attn_decls(cfg)
+        elif cfg.family == "encdec":
+            enc_cfg = cfg.replace(causal=False)
+            out["enc_layers"] = stack_decls(
+                {
+                    "norm1": L.norm_decls(cfg.d_model, cfg.norm),
+                    "attn": L.attention_decls(enc_cfg),
+                    "norm2": L.norm_decls(cfg.d_model, cfg.norm),
+                    "mlp": L.mlp_decls(cfg),
+                },
+                cfg.encoder_layers,
+            )
+            out["enc_norm"] = L.norm_decls(cfg.d_model, cfg.norm)
+            out["layers"] = stack_decls(
+                {
+                    "norm1": L.norm_decls(cfg.d_model, cfg.norm),
+                    "self_attn": L.attention_decls(cfg),
+                    "norm_x": L.norm_decls(cfg.d_model, cfg.norm),
+                    "cross_attn": L.attention_decls(cfg),
+                    "norm2": L.norm_decls(cfg.d_model, cfg.norm),
+                    "mlp": L.mlp_decls(cfg),
+                },
+                cfg.n_layers,
+            )
+        else:
+            raise ValueError(cfg.family)
+        out["final_norm"] = L.norm_decls(cfg.d_model, cfg.norm)
+        return out
+
+    def init(self, key, dtype_override=None):
+        return init_params(key, self.decls(), dtype_override)
+
+    def abstract_params(self, dtype_override=None):
+        return abstract_params(self.decls(), dtype_override)
+
+    # ----- forward (train / prefill) ---------------------------------------
+
+    def forward(self, params, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.pos == "mrope":
+            pos_in = batch.get("pos3")
+            if pos_in is None:
+                pos_in = jnp.broadcast_to(positions[..., None], (b, s, 3))
+        else:
+            pos_in = positions
+        x = L.apply_embed(params["embed"], tokens, cfg, positions)
+        aux = _zero_aux()
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            x, aux = self._run_dense_stack(params["layers"], x, pos_in, aux)
+        elif cfg.family == "ssm":
+            x = self._run_rwkv_stack(params["layers"], x)
+        elif cfg.family == "hybrid":
+            x = self._run_hybrid_stack(params, x, pos_in)
+        elif cfg.family == "encdec":
+            enc = self._run_encoder(params, batch["enc_embed"])
+            x = self._run_decoder_encdec(params["layers"], x, enc, pos_in)
+
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.apply_unembed(params["embed"], x, cfg)
+        return logits, aux
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn) if self.cfg.remat else fn
+
+    def _scan(self, body, init, xs):
+        # scan_unroll=True only in dry-run cost lowering (see configs/base.py)
+        return lax.scan(body, init, xs, unroll=True if self.cfg.scan_unroll else 1)
+
+    def _run_dense_stack(self, stacked, x, pos_in, aux):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, aux = carry
+            x, aux = _dense_block(lp, x, cfg, pos_in, aux)
+            return (x, aux), None
+
+        (x, aux), _ = self._scan(self._maybe_remat(body), (x, aux), stacked)
+        return x, aux
+
+    def _run_rwkv_stack(self, stacked, x):
+        cfg = self.cfg
+        b = x.shape[0]
+        h = cfg.n_heads
+        hd = cfg.d_model // h
+        zero_states = (
+            jnp.zeros((b, cfg.d_model), x.dtype),
+            jnp.zeros((b, cfg.d_model), x.dtype),
+            jnp.zeros((b, h, hd, hd), jnp.float32),
+        )
+
+        def body(x, lp):
+            x, _ = _rwkv_block(lp, x, cfg, zero_states)
+            return x, None
+
+        x, _ = self._scan(self._maybe_remat(body), x, stacked)
+        return x
+
+    def _run_hybrid_stack(self, params, x, pos_in):
+        cfg = self.cfg
+        b = x.shape[0]
+        di, n = cfg.resolved_ssm_d_inner, cfg.ssm_state
+        nh = di // cfg.ssm_head_dim
+        cdim = di + 2 * n
+        zero_states = (
+            jnp.zeros((b, cfg.ssm_conv - 1, cdim), x.dtype),
+            jnp.zeros((b, nh, n, cfg.ssm_head_dim), jnp.float32),
+        )
+        shared = params["shared_attn"]
+        k = cfg.attn_every
+
+        def body(carry, inp):
+            x = carry
+            i, lp = inp
+            x, _ = _mamba_block(lp, x, cfg, zero_states)
+            x = lax.cond(
+                (i + 1) % k == 0,
+                lambda x: _shared_attn_block(shared, x, cfg, pos_in),
+                lambda x: x,
+                x,
+            )
+            return x, None
+
+        idx = jnp.arange(cfg.n_layers)
+        x, _ = self._scan(self._maybe_remat(body), x, (idx, params["layers"]))
+        return x
+
+    def _run_encoder(self, params, enc_embed):
+        cfg = self.cfg
+        enc_cfg = cfg.replace(causal=False, pos="none")
+        x = shard_act(enc_embed.astype(getattr(jnp, cfg.dtype)), ("batch", "seq", "embed"))
+        b, f, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+        def body(x, lp):
+            h = L.apply_norm(lp["norm1"], x, cfg.norm)
+            x = x + L.apply_attention(lp["attn"], h, enc_cfg, pos, q_chunk=cfg.q_chunk)
+            h = L.apply_norm(lp["norm2"], x, cfg.norm)
+            x = shard_act(x + L.apply_mlp(lp["mlp"], h, cfg), ("batch", "seq_resid", "embed"))
+            return x, None
+
+        x, _ = self._scan(self._maybe_remat(body), x, params["enc_layers"])
+        return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def _run_decoder_encdec(self, stacked, x, enc, pos_in):
+        cfg = self.cfg
+
+        def body(x, lp):
+            h = L.apply_norm(lp["norm1"], x, cfg.norm)
+            x = x + L.apply_attention(lp["self_attn"], h, cfg, pos_in, q_chunk=cfg.q_chunk)
+            h = L.apply_norm(lp["norm_x"], x, cfg.norm)
+            x = x + L.apply_cross_attention(lp["cross_attn"], h, enc, cfg)
+            h = L.apply_norm(lp["norm2"], x, cfg.norm)
+            x = shard_act(x + L.apply_mlp(lp["mlp"], h, cfg), ("batch", "seq_resid", "embed"))
+            return x, None
+
+        x, _ = self._scan(self._maybe_remat(body), x, stacked)
+        return x
+
+    # ----- loss -------------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[Array, Dict]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        lg = logits.astype(jnp.float32)
+        if self.cfg.padded_vocab != self.cfg.vocab:  # mask pad-token logits
+            pad_mask = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab
+            lg = jnp.where(pad_mask, lg, -1e30)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + 0.01 * aux["moe_aux_loss"] + 0.001 * aux["moe_z_loss"]
+        metrics = {"ce": ce, **aux}
+        return total, metrics
+
+    # ----- decode -----------------------------------------------------------
+
+    def cache_decls(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        bf16 = jnp.bfloat16
+        out: Dict[str, Any] = {
+            "pos": ParamDecl((batch,), ("batch",), init="zeros", dtype=jnp.int32)
+        }
+        if cfg.family in ("dense", "moe", "vlm"):
+            clen = min(cache_len, cfg.window) if cfg.attention == "swa" else cache_len
+            shape = (cfg.n_layers, batch, clen, cfg.n_kv_heads, hd)
+            axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+            out["k"] = ParamDecl(shape, axes, init="zeros", dtype=bf16)
+            out["v"] = ParamDecl(shape, axes, init="zeros", dtype=bf16)
+        elif cfg.family == "ssm":
+            h = cfg.n_heads
+            khd = cfg.d_model // h
+            out["x_prev_t"] = ParamDecl((cfg.n_layers, batch, cfg.d_model), ("layers", "batch", "embed"), init="zeros", dtype=bf16)
+            out["x_prev_c"] = ParamDecl((cfg.n_layers, batch, cfg.d_model), ("layers", "batch", "embed"), init="zeros", dtype=bf16)
+            out["s"] = ParamDecl((cfg.n_layers, batch, h, khd, khd), ("layers", "batch", "heads", None, None), init="zeros")
+        elif cfg.family == "hybrid":
+            di, n = cfg.resolved_ssm_d_inner, cfg.ssm_state
+            nh = di // cfg.ssm_head_dim
+            cdim = di + 2 * n
+            out["conv_tail"] = ParamDecl((cfg.n_layers, batch, cfg.ssm_conv - 1, cdim), ("layers", "batch", None, "mlp"), init="zeros", dtype=bf16)
+            out["h"] = ParamDecl((cfg.n_layers, batch, nh, n, cfg.ssm_head_dim), ("layers", "batch", "heads", None, None), init="zeros")
+            n_inv = cfg.n_layers // cfg.attn_every
+            shape = (n_inv, batch, cache_len, cfg.n_kv_heads, hd)
+            axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+            out["k"] = ParamDecl(shape, axes, init="zeros", dtype=bf16)
+            out["v"] = ParamDecl(shape, axes, init="zeros", dtype=bf16)
+        elif cfg.family == "encdec":
+            shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+            axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+            out["k"] = ParamDecl(shape, axes, init="zeros", dtype=bf16)
+            out["v"] = ParamDecl(shape, axes, init="zeros", dtype=bf16)
+            fshape = (cfg.n_layers, batch, cfg.encoder_frames, cfg.n_kv_heads, hd)
+            faxes = ("layers", "batch", "frames", "kv_heads", None)
+            out["enc_k"] = ParamDecl(fshape, faxes, init="zeros", dtype=bf16)
+            out["enc_v"] = ParamDecl(fshape, faxes, init="zeros", dtype=bf16)
+        return out
+
+    def init_cache(self, batch: int, cache_len: int):
+        return init_params(jax.random.PRNGKey(0), self.cache_decls(batch, cache_len))
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        return abstract_params(self.cache_decls(batch, cache_len))
+
+    def decode_step(self, params, cache, tokens: Array):
+        """tokens (B,) int32 — one new token per sequence. Returns
+        (logits (B, vocab), new cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        pos = cache["pos"]
+        x = jnp.take(params["embed"]["tok"].astype(getattr(jnp, cfg.dtype)), tokens, axis=0)
+        if cfg.pos == "learned":
+            x = x + jnp.take(params["embed"]["pos"].astype(x.dtype), pos, axis=0)
+        x = x[:, None, :]  # (B, 1, D)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            x = self._decode_dense(params, cache, x, pos)
+        elif cfg.family == "ssm":
+            x = self._decode_rwkv(params, cache, x, pos)
+        elif cfg.family == "hybrid":
+            x = self._decode_hybrid(params, cache, x, pos)
+        elif cfg.family == "encdec":
+            x = self._decode_encdec(params, cache, x, pos)
+
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = L.apply_unembed(params["embed"], x, cfg)[:, 0]
+        if cfg.padded_vocab != cfg.vocab:  # never emit pad tokens
+            pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        cache["pos"] = pos + 1
+        return logits, cache
+
+    def _decode_dense(self, params, cache, x, pos):
+        cfg = self.cfg
+
+        def body(x, lp_kv):
+            lp, kc, vc = lp_kv
+            h = L.apply_norm(lp["norm1"], x, cfg.norm)
+            att, kc, vc = L.decode_attention(lp["attn"], h, cfg, kc, vc, pos)
+            x = x + att
+            h = L.apply_norm(lp["norm2"], x, cfg.norm)
+            if cfg.n_experts:
+                y, _ = M.apply_moe(lp["moe"], h, cfg, cfg.capacity_factor)
+            else:
+                y = L.apply_mlp(lp["mlp"], h, cfg)
+            return x + y, (kc, vc)
+
+        x, (ks, vs) = self._scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        cache["k"], cache["v"] = ks, vs
+        return x
+
+    def _decode_rwkv(self, params, cache, x, pos):
+        cfg = self.cfg
+
+        def body(x, lp_st):
+            lp, xt, xc, s0 = lp_st
+            x2 = x[:, 0]
+            h = L.apply_norm(lp["norm1"], x2[:, None], cfg.norm)[:, 0]
+            y, xt_new, s_new = S.rwkv6_decode_step(lp["time"], h, cfg, xt, xc, s0)
+            x2 = x2 + y
+            h = L.apply_norm(lp["norm2"], x2[:, None], cfg.norm)[:, 0]
+            y, xc_new = S.rwkv6_channel_mix_step(lp["time"], h, cfg, xc)
+            return (x2 + y)[:, None], (xt_new, xc_new, s_new)
+
+        x, (xts, xcs, ss) = self._scan(
+            body, x, (params["layers"], cache["x_prev_t"], cache["x_prev_c"], cache["s"])
+        )
+        cache["x_prev_t"], cache["x_prev_c"], cache["s"] = xts, xcs, ss
+        return x
+
+    def _decode_hybrid(self, params, cache, x, pos):
+        cfg = self.cfg
+        k = cfg.attn_every
+        shared = params["shared_attn"]
+        n_inv = cfg.n_layers // k
+
+        def shared_step(x, kc, vc):
+            h = L.apply_norm(shared["norm1"], x, cfg.norm)
+            att, kc, vc = L.decode_attention(shared["attn"], h, cfg, kc, vc, pos)
+            x = x + att
+            h = L.apply_norm(shared["norm2"], x, cfg.norm)
+            return x + L.apply_mlp(shared["mlp"], h, cfg), kc, vc
+
+        def body(carry, inp):
+            x = carry
+            i, lp, tail, h0 = inp
+            h = L.apply_norm(lp["norm1"], x[:, 0][:, None], cfg.norm)[:, 0]
+            y, tail_new, h_new = S.mamba2_decode_step(lp["mamba"], h, cfg, tail, h0)
+            x = x + y[:, None]
+            return x, (tail_new, h_new)
+
+        # mamba layers via scan; shared attention applied at invocation points
+        # outside the scan (it has its own unstacked cache).
+        xs = x
+        tails, hs = [], []
+        # group layers between shared-attn invocations (static python loop over
+        # n_inv+1 segments keeps HLO small: segments reuse the same scan body)
+        lidx = jnp.arange(cfg.n_layers)
+        seg_bounds = [(g * k, min((g + 1) * k, cfg.n_layers)) for g in range(n_inv)]
+        rem = (n_inv * k, cfg.n_layers)
+        # in-place updates keep the (donated) cache buffers aliased — no copies
+        for g, (lo, hi) in enumerate(seg_bounds + ([rem] if rem[0] < rem[1] else [])):
+            seg = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], params["layers"])
+            seg_tail = cache["conv_tail"][lo:hi]
+            seg_h = cache["h"][lo:hi]
+            xs, (t_new, h_new) = self._scan(
+                body, xs, (lidx[lo:hi], seg, seg_tail, seg_h)
+            )
+            cache["conv_tail"] = lax.dynamic_update_slice_in_dim(
+                cache["conv_tail"], t_new.astype(cache["conv_tail"].dtype), lo, axis=0
+            )
+            cache["h"] = lax.dynamic_update_slice_in_dim(
+                cache["h"], h_new.astype(cache["h"].dtype), lo, axis=0
+            )
+            if g < n_inv:
+                xs, kc, vc = shared_step(xs, cache["k"][g], cache["v"][g])
+                cache["k"] = cache["k"].at[g].set(kc)
+                cache["v"] = cache["v"].at[g].set(vc)
+        return xs
+
+    def _decode_encdec(self, params, cache, x, pos):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, kc, vc, ek, ev = inp
+            h = L.apply_norm(lp["norm1"], x, cfg.norm)
+            att, kc, vc = L.decode_attention(lp["self_attn"], h, cfg, kc, vc, pos)
+            x = x + att
+            h = L.apply_norm(lp["norm_x"], x, cfg.norm)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(h.dtype))
+            o = L._sdpa(q, ek, ev, causal=False)
+            x = x + jnp.einsum(
+                "bshk,hkd->bsd", o, lp["cross_attn"]["wo"].astype(h.dtype)
+            )
+            h = L.apply_norm(lp["norm2"], x, cfg.norm)
+            x = x + L.apply_mlp(lp["mlp"], h, cfg)
+            return x, (kc, vc)
+
+        x, (ks, vs) = self._scan(
+            body,
+            x,
+            (params["layers"], cache["k"], cache["v"], cache["enc_k"], cache["enc_v"]),
+        )
+        cache["k"], cache["v"] = ks, vs
+        return x
+
+    def prefill_encdec_cache(self, params, cache, enc_embed):
+        """Precompute cross-attention K/V from encoder output (decode setup)."""
+        cfg = self.cfg
+        enc = self._run_encoder(params, enc_embed)
+
+        def body(_, lp):
+            dt = enc.dtype
+            ek = jnp.einsum("bfd,dhk->bfhk", enc, lp["cross_attn"]["wk"].astype(dt))
+            ev = jnp.einsum("bfd,dhk->bfhk", enc, lp["cross_attn"]["wv"].astype(dt))
+            return None, (ek, ev)
+
+        _, (eks, evs) = self._scan(body, None, params["layers"])
+        cache["enc_k"], cache["enc_v"] = eks, evs
+        return cache

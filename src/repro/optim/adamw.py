@@ -1,0 +1,114 @@
+"""AdamW + schedules + global-norm clipping — pure-pytree, no optax dependency.
+
+Optimizer state shards exactly like the params (m/v inherit the param
+PartitionSpecs), which is what makes FSDP-style sharding of optimizer memory
+work for the ≥100B configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array  # () int32
+    m: object  # pytree like params
+    v: object  # pytree like params
+    master: object = None  # fp32 master weights when params are bf16 on the wire
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array]  # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32  # bf16 for ≥50B-param configs (memory)
+    # keep_master=True: params live in bf16 (halving FSDP weight-gather wire
+    # bytes — the update path reads/writes an fp32 master copy held here).
+    keep_master: bool = False
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=self.moment_dtype), params
+        )
+        master = (
+            jax.tree.map(lambda p: p.astype(jnp.float32), params)
+            if self.keep_master
+            else None
+        )
+        return AdamWState(
+            jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros), master
+        )
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        md = self.moment_dtype
+        m = jax.tree.map(
+            lambda m_, g: (self.b1 * m_.astype(jnp.float32) + (1 - self.b1) * g).astype(md),
+            state.m, grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: (self.b2 * v_.astype(jnp.float32) + (1 - self.b2) * jnp.square(g)).astype(md),
+            state.v, grads,
+        )
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, m_, v_):
+            mhat = m_.astype(jnp.float32) / bc1
+            vhat = v_.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p.astype(
+                jnp.float32
+            )
+            return p.astype(jnp.float32) - lr * delta  # fp32
+
+        if self.keep_master:
+            new_master = jax.tree.map(upd, state.master, m, v)
+            new_params = jax.tree.map(
+                lambda mp, p: mp.astype(p.dtype), new_master, params
+            )
+            return new_params, AdamWState(step, m, v, new_master), {
+                "grad_norm": gnorm, "lr": lr,
+            }
+        new_params = jax.tree.map(
+            lambda p, m_, v_: upd(p, m_, v_).astype(p.dtype), params, m, v
+        )
+        return new_params, AdamWState(step, m, v, None), {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[Array], Array]:
+    def lr(step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_value: float) -> Callable[[Array], Array]:
+    return lambda step: jnp.full((), lr_value, jnp.float32)

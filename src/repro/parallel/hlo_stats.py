@@ -1,0 +1,111 @@
+"""HLO text analysis — collective-byte accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective traffic, so we
+parse the (SPMD-partitioned) HLO for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops, take each op's RESULT shape bytes and group
+size (from replica_groups), and convert to per-device wire bytes with standard
+ring-algorithm factors:
+
+    all-reduce:          2·(g-1)/g · bytes
+    all-gather:            (g-1)/g · bytes       (result bytes)
+    reduce-scatter:        (g-1)/g · bytes·g     (operand = result·g)
+    all-to-all:            (g-1)/g · bytes
+    collective-permute:              bytes
+
+This is per-device traffic over the slowest link on the ring, the quantity the
+ICI roofline term wants.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind: op count, raw result bytes, ring wire bytes."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0}
+    )
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match " <shape(s)> kind(" — the op use, not metadata mentions
+            token = f" {kind}("
+            start_token = f"{kind}-start("
+            if token not in ls and start_token not in ls:
+                continue
+            if "-done(" in ls:
+                continue  # async completion carries no new shape
+            lhs = ls.split(f" {kind}")[0]
+            rb = _shape_bytes(lhs)
+            g = _group_size(ls)
+            if kind == "collective-permute":
+                factor = 1.0  # pairwise; no replica_groups attribute
+            elif g <= 1:
+                # degenerate group — no wire traffic
+                factor = 0.0
+            elif kind == "all-reduce":
+                factor = 2.0 * (g - 1) / g
+            elif kind == "all-gather":
+                factor = (g - 1) / g
+            elif kind == "reduce-scatter":
+                factor = float(g - 1)  # operand bytes = result·g; (g-1)/g·g
+            else:  # all-to-all
+                factor = (g - 1) / g
+            s = stats[kind]
+            s["count"] += 1
+            s["result_bytes"] += rb
+            s["wire_bytes"] += rb * factor
+            break
+    return dict(stats)
+
+
+def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["wire_bytes"] for s in stats.values())
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules → concrete PartitionSpecs, with divisibility fallback.
+
+MaxText-style: model code names dimensions logically ('batch', 'embed', 'heads',
+'mlp', 'vocab', 'expert', ...); a rule table per run maps logical names to mesh
+axes. Because the 10 assigned architectures have wildly different divisibility
+(whisper: 20 heads, vocab 51866; command-r: kv_heads=8 < model=16), a requested
+mapping is *demoted* — drop mesh axes right-to-left, then replicate — whenever
+the dimension is not divisible or the mesh axis is already taken by another
+dimension of the same tensor. Demotions are deterministic and recorded so the
+dry-run artifact shows exactly what sharded where.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (tried left-to-right as a unit, then demoted)
+ParamRules = Dict[str, Tuple[str, ...]]
+
+# Parameters: TP axes on 'model', FSDP on 'data' (+'pod' for the very largest).
+DEFAULT_PARAM_RULES: ParamRules = {
+    "layers": (),
+    "embed": ("data",),  # FSDP: contracting dims sharded over data
+    "embed_table": (),  # embedding feature dim: never FSDP (gather reshard cost)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "qkv": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_mlp": (),
+    "state": (),
+    "conv": (),
+    "frames": (),
+}
+
+# Activations: batch data-parallel; TP dims on 'model'; seq for sequence-parallel.
+DEFAULT_ACT_RULES: ParamRules = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    # residual-stream seq axis: mapped to 'model' (Megatron-style sequence
+    # parallelism) when saved activation checkpoints would overflow HBM —
+    # auto-enabled by build_train_step, recorded in the dry-run artifact.
+    "seq_resid": (),
+    "cache_seq": ("model", "data"),  # decode KV cache seq: model axis, plus data when batch=1 frees it (long_500k)
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    # attention-score q-dim: takes 'model' exactly when the head dims could
+    # NOT (e.g. qwen2-vl's 12 heads / whisper's 20 heads on a 16-way axis) —
+    # sequence-parallel attention instead of 16x-redundant replication. The
+    # one-use-per-tensor demotion rule makes this self-targeting.
+    "seq_q": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_cap": (),
+    "state": (),
+    "layers": (),
+    "frames": (),
+}
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: ParamRules,
+    mesh_shape: Dict[str, int],
+    log: Optional[list] = None,
+) -> P:
+    """Build a PartitionSpec honoring divisibility + one-use-per-mesh-axis."""
+    used: set = set()
+    parts = []
+    for dim, (name, size) in enumerate(zip(axes, shape)):
+        if name is None:
+            parts.append(None)
+            continue
+        want = tuple(a for a in rules.get(name, ()) if a in mesh_shape)
+        # demote: drop axes right-to-left until divisible & unused
+        choice: Tuple[str, ...] = ()
+        cand = list(want)
+        while cand:
+            prod = 1
+            ok = True
+            for a in cand:
+                if a in used:
+                    ok = False
+                    break
+                prod *= mesh_shape[a]
+            if ok and size % prod == 0:
+                choice = tuple(cand)
+                break
+            cand.pop()  # drop rightmost
+        if log is not None and choice != want and want:
+            log.append(f"demote dim{dim}({name},{size}): {want} -> {choice}")
+        used.update(choice)
+        parts.append(choice if len(choice) > 1 else (choice[0] if choice else None))
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Context: mesh + rules available to model code for activation constraints.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    param_rules: ParamRules
+    act_rules: ParamRules
+    log: list = dataclasses.field(default_factory=list)
+
+    @property
+    def mesh_shape(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+
+_tls = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(ctx: Optional[ShardingCtx]):
+    prev = current_ctx()
+    _tls.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _tls.ctx = prev
+
+
+def make_ctx(mesh: Mesh, param_rules=None, act_rules=None) -> ShardingCtx:
+    return ShardingCtx(
+        mesh=mesh,
+        param_rules=dict(param_rules or DEFAULT_PARAM_RULES),
+        act_rules=dict(act_rules or DEFAULT_ACT_RULES),
+    )
+
+
+def shard_act(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation's sharding by logical axes. No-op outside a ctx."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(axes, x.shape, ctx.act_rules, ctx.mesh_shape, ctx.log)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def param_pspecs(decls, ctx: ShardingCtx):
+    """PartitionSpec tree for a ParamDecl tree under ctx's param rules."""
+    from repro.models.param import is_decl
+
+    return jax.tree.map(
+        lambda d: spec_for(d.axes, d.shape, ctx.param_rules, ctx.mesh_shape, ctx.log),
+        decls,
+        is_leaf=is_decl,
+    )
+
+
+def param_shardings(decls, ctx: ShardingCtx):
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        param_pspecs(decls, ctx),
+        is_leaf=lambda x: isinstance(x, P),
+    )

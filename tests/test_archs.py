@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (assigned requirement): reduced same-family
+configs, one forward + one train step + one decode step on CPU, asserting
+output shapes and finiteness; decode-vs-teacher-forcing consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.configs.base import ShapeSpec
+from repro.launch.mesh import host_device_mesh
+from repro.launch.steps import TrainState, build_train_step, make_optimizer
+from repro.models.model import build_model, make_inputs
+from repro.parallel.sharding import make_ctx
+
+SHAPE = ShapeSpec("smoke", 16, 2, "train")
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = smoke_config(get_config(request.param))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, SHAPE)
+    return request.param, cfg, model, params, batch
+
+
+def test_forward_shape_and_finite(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (SHAPE.global_batch, SHAPE.seq_len, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+def test_train_step_decreases_nothing_nan(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    mesh = host_device_mesh(1, 1)
+    ctx = make_ctx(mesh)
+    jit_step, _, _ = build_train_step(cfg, SHAPE, ctx, microbatches=1)
+    opt = make_optimizer()
+    # the step donates its input state — give it a copy so the module-scoped
+    # fixture params survive for the decode test, and snapshot for the delta
+    before = jax.tree.map(lambda p: np.asarray(p).copy(), params)
+    tr_params = jax.tree.map(jnp.copy, params)
+    state = TrainState(params=tr_params, opt=opt.init(tr_params))
+    state, metrics = jit_step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda p, q: float(np.sum(np.abs(p - np.asarray(q)))), before, state.params
+        ),
+    )
+    assert delta > 0, arch
+
+
+def test_decode_matches_forward(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    s = SHAPE.seq_len
+    logits, _ = jax.jit(model.forward)(params, batch)
+    cache = model.init_cache(batch=SHAPE.global_batch, cache_len=s)
+    if cfg.family == "encdec":
+        cache = model.prefill_encdec_cache(params, cache, batch["enc_embed"])
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(s):
+        lg, cache = step(params, cache, batch["tokens"][:, t])
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1).astype(jnp.float32)
+    ref = logits.astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    rel = float(jnp.max(jnp.abs(dec - ref))) / scale
+    # attention archs are exact; ssm (bf16 chunk-order) and moe (capacity
+    # semantics differ between prefill and decode) get tolerance
+    tol = 0.12 if (cfg.n_experts or cfg.ssm) else 1e-3
+    assert rel < tol, (arch, rel)
+
+
+def test_microbatched_train_matches_unbatched():
+    cfg = smoke_config(get_config("granite-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, SHAPE)
+    mesh = host_device_mesh(1, 1)
+    opt = make_optimizer()
+
+    losses = {}
+    for m in (1, 2):
+        ctx = make_ctx(mesh)
+        jit_step, _, _ = build_train_step(cfg, SHAPE, ctx, microbatches=m)
+        p = jax.tree.map(jnp.copy, params)  # the step donates its state
+        state = TrainState(params=p, opt=opt.init(p))
+        _, metrics = jit_step(state, batch)
+        losses[m] = float(metrics["loss"])
+    assert abs(losses[1] - losses[2]) / abs(losses[1]) < 2e-2, losses

@@ -1,0 +1,105 @@
+"""Pallas kernel validation — interpret-mode vs the pure-jnp oracle (ref.py).
+
+Per instructions: sweep shapes/dtypes and assert allclose (here: exact equality
+— the kernels are boolean) against the oracle, plus hypothesis-random CSPs and
+end-to-end fixpoint equality.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import enforce, random_csp
+from repro.kernels import ops
+from repro.kernels.ref import (
+    pack_bits_ref,
+    revise_packed_ref,
+    revise_ref,
+)
+
+SHAPE_SWEEP = [
+    # (n_vars, dom_size, block_rx, block_ry)
+    (4, 3, 4, 4),
+    (8, 5, 8, 8),
+    (10, 6, 8, 8),
+    (16, 8, 8, 8),
+    (16, 8, 4, 8),
+    (16, 8, 8, 4),
+    (24, 33, 8, 8),  # d > 32: multi-word bitpack
+    (12, 64, 4, 4),
+]
+
+
+def _changed_patterns(n, seed):
+    rng = np.random.default_rng(seed)
+    return [
+        np.ones(n, bool),
+        rng.random(n) < 0.5,
+        np.eye(n, dtype=bool)[rng.integers(n)],
+    ]
+
+
+@pytest.mark.parametrize("n,d,brx,bry", SHAPE_SWEEP)
+def test_dense_kernel_matches_oracle(n, d, brx, bry):
+    csp = random_csp(n, d, density=0.6, tightness=0.4, seed=n * 100 + d)
+    net, dom_p, (n_p, d_p) = ops.prepare_dense(csp, brx, bry)
+    rf = ops._dense_revise_fn(n_p, d_p, brx, bry, True)
+    for changed in _changed_patterns(n, seed=d):
+        ch = jnp.asarray(changed)
+        oracle = revise_ref(csp.cons, csp.mask, csp.dom, ch)
+        got = rf(net, dom_p, jnp.pad(ch, (0, n_p - n)))[:n, :d]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("n,d,brx,bry", SHAPE_SWEEP)
+def test_packed_kernel_matches_oracle(n, d, brx, bry):
+    csp = random_csp(n, d, density=0.6, tightness=0.4, seed=n * 100 + d)
+    net, dom_p, (n_p, d_p, w) = ops.prepare_packed(csp, brx, bry)
+    rf = ops._packed_revise_fn(n_p, d_p, w, brx, bry, True)
+    for changed in _changed_patterns(n, seed=d):
+        ch = jnp.asarray(changed)
+        oracle = revise_ref(csp.cons, csp.mask, csp.dom, ch)
+        got = rf(net, dom_p, jnp.pad(ch, (0, n_p - n)))[:n, :d]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+
+
+def test_packed_oracle_matches_dense_oracle():
+    """The bitpacked formulation itself (ref-level) is equivalent."""
+    csp = random_csp(9, 37, density=0.7, tightness=0.5, seed=11)
+    ch = jnp.ones((9,), jnp.bool_)
+    dense = revise_ref(csp.cons, csp.mask, csp.dom, ch)
+    cons_pk = pack_bits_ref(csp.cons)
+    dom_pk = pack_bits_ref(csp.dom)
+    packed = revise_packed_ref(cons_pk, csp.mask, dom_pk, ch)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(packed))
+
+
+def test_pack_bits_roundtrip_values():
+    bits = jnp.asarray(np.random.default_rng(0).random((5, 70)) < 0.5)
+    words = pack_bits_ref(bits)
+    assert words.shape == (5, 3)
+    # unpack manually and compare
+    un = (
+        (words[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) & 1
+    ).astype(bool).reshape(5, 96)[:, :70]
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(bits))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(3, 12),
+    st.integers(2, 9),
+    st.floats(0.2, 1.0),
+    st.floats(0.2, 0.7),
+    st.integers(0, 999),
+)
+def test_end_to_end_kernel_enforcement(n, d, dens, tight, seed):
+    csp = random_csp(n, d, dens, tight, seed)
+    ref = enforce(csp.cons, csp.mask, csp.dom)
+    for fn in (ops.enforce_dense_kernel, ops.enforce_packed_kernel):
+        got = fn(csp)
+        assert bool(got.consistent) == bool(ref.consistent)
+        assert int(got.n_recurrences) == int(ref.n_recurrences)
+        if bool(ref.consistent):
+            np.testing.assert_array_equal(np.asarray(got.dom), np.asarray(ref.dom))

@@ -1,0 +1,132 @@
+"""Property tests for the paper's core claims (Prop. 1 / Prop. 2).
+
+RTAC's fixpoint must equal the classical AC closure computed by two independent
+implementations (queue-based AC3 and a naive definitional sweep), on arbitrary
+random CSPs — including inconsistent ones.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ac_closure_brute,
+    assign,
+    enforce,
+    enforce_ac3,
+    enforce_batch,
+    enforce_csp,
+    enforce_full,
+    nqueens_csp,
+    random_csp,
+    to_paper_cons,
+)
+
+csp_params = st.tuples(
+    st.integers(2, 10),  # n_vars
+    st.integers(2, 6),  # dom_size
+    st.floats(0.1, 1.0),  # density
+    st.floats(0.1, 0.8),  # tightness
+    st.integers(0, 10_000),  # seed
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(csp_params)
+def test_rtac_equals_ac3_equals_brute(params):
+    n, d, dens, tight, seed = params
+    csp = random_csp(n, d, dens, tight, seed)
+    cons, mask, dom = map(np.asarray, (csp.cons, csp.mask, csp.dom))
+    bd, bc = ac_closure_brute(cons, mask, dom)
+    a3 = enforce_ac3(cons, mask, dom)
+    r = enforce(csp.cons, csp.mask, csp.dom)
+    rf = enforce_full(csp.cons, csp.mask, csp.dom)
+    assert bc == a3.consistent == bool(r.consistent) == bool(rf.consistent)
+    if bc:
+        np.testing.assert_array_equal(bd, a3.dom)
+        np.testing.assert_array_equal(bd, np.asarray(r.dom))
+        np.testing.assert_array_equal(bd, np.asarray(rf.dom))
+
+
+@settings(max_examples=20, deadline=None)
+@given(csp_params)
+def test_idempotence(params):
+    """Enforcing an already-AC network changes nothing and converges in ≤1
+    recurrence (Prop. 1(2a): the fixpoint is stable)."""
+    n, d, dens, tight, seed = params
+    csp = random_csp(n, d, dens, tight, seed)
+    r1 = enforce(csp.cons, csp.mask, csp.dom)
+    if not bool(r1.consistent):
+        return
+    r2 = enforce(csp.cons, csp.mask, r1.dom)
+    assert bool(r2.consistent)
+    np.testing.assert_array_equal(np.asarray(r1.dom), np.asarray(r2.dom))
+    assert int(r2.n_recurrences) <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(csp_params)
+def test_incremental_after_assignment(params):
+    """Prop. 2 contract: after an assignment on an AC network, enforcing with
+    changed0={var} equals full re-enforcement."""
+    n, d, dens, tight, seed = params
+    csp = random_csp(n, d, dens, tight, seed)
+    r0 = enforce(csp.cons, csp.mask, csp.dom)
+    if not bool(r0.consistent):
+        return
+    dom_np = np.asarray(r0.dom)
+    var = int(np.argmax(dom_np.sum(1)))
+    val = int(np.argmax(dom_np[var]))
+    dom_a = assign(r0.dom, var, val)
+    ch = jnp.zeros((n,), jnp.bool_).at[var].set(True)
+    inc = enforce(csp.cons, csp.mask, dom_a, ch)
+    full = enforce_full(csp.cons, csp.mask, dom_a)
+    assert bool(inc.consistent) == bool(full.consistent)
+    if bool(inc.consistent):
+        np.testing.assert_array_equal(np.asarray(inc.dom), np.asarray(full.dom))
+
+
+def test_paper_cons_encoding_equivalent():
+    """Our (cons-zeros + mask) encoding == the paper's all-ones encoding."""
+    csp = random_csp(8, 5, 0.5, 0.4, seed=7)
+    paper = to_paper_cons(csp)
+    full_mask = jnp.ones_like(csp.mask)  # paper: every pair "constrained"
+    r_ours = enforce(csp.cons, csp.mask, csp.dom)
+    r_paper = enforce(paper, full_mask, csp.dom)
+    assert bool(r_ours.consistent) == bool(r_paper.consistent)
+    np.testing.assert_array_equal(np.asarray(r_ours.dom), np.asarray(r_paper.dom))
+
+
+def test_batched_matches_single():
+    csp = random_csp(10, 6, 0.6, 0.4, seed=3)
+    doms = []
+    for i in range(4):
+        d = np.asarray(csp.dom).copy()
+        d[i % 10, : i + 1] = False
+        doms.append(d)
+    dom_b = jnp.asarray(np.stack(doms))
+    res = enforce_batch(csp.cons, csp.mask, dom_b)
+    for i in range(4):
+        ref = enforce(csp.cons, csp.mask, dom_b[i])
+        assert bool(ref.consistent) == bool(res.consistent[i])
+        if bool(ref.consistent):
+            np.testing.assert_array_equal(np.asarray(ref.dom), np.asarray(res.dom[i]))
+
+
+def test_wipeout_detected():
+    csp = random_csp(6, 4, 1.0, 0.4, seed=1)
+    dom = np.asarray(csp.dom).copy()
+    dom[2, :] = False  # empty domain
+    r = enforce(csp.cons, csp.mask, jnp.asarray(dom))
+    assert not bool(r.consistent)
+
+
+def test_recurrence_count_matches_paper_band():
+    """Paper Table 1: dense random nets converge in ~3-5 recurrences."""
+    ks = []
+    for seed in range(5):
+        csp = random_csp(100, 20, 0.5, 0.3, seed)
+        r = enforce_csp(csp)
+        ks.append(int(r.n_recurrences))
+    assert max(ks) <= 8, ks  # generous band; exact stats in benchmarks

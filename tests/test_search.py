@@ -1,0 +1,74 @@
+"""MAC backtrack search (paper Alg. 2) — end-to-end correctness."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    check_solution,
+    coloring_csp,
+    count_solutions,
+    mac_solve,
+    nqueens_csp,
+    random_csp,
+    solve_brute,
+)
+
+
+@pytest.mark.parametrize("engine", ["rtac", "rtac_full", "ac3"])
+def test_nqueens(engine):
+    csp = nqueens_csp(8)
+    sol, stats = mac_solve(csp, engine=engine)
+    assert sol is not None and check_solution(csp, sol)
+    assert stats.n_assignments > 0
+
+
+def test_nqueens_batched_children():
+    csp = nqueens_csp(8)
+    sol, _ = mac_solve(csp, engine="rtac", batched_children=True)
+    assert sol is not None and check_solution(csp, sol)
+
+
+def test_nqueens_unsat():
+    csp = nqueens_csp(3)  # 3-queens has no solution
+    for engine in ("rtac", "ac3"):
+        sol, _ = mac_solve(csp, engine=engine)
+        assert sol is None
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_csp_against_brute(seed):
+    csp = random_csp(7, 4, density=0.7, tightness=0.5, seed=seed)
+    cons, mask, dom = map(np.asarray, (csp.cons, csp.mask, csp.dom))
+    brute = solve_brute(cons, mask, dom)
+    sol, _ = mac_solve(csp, engine="rtac")
+    sol3, _ = mac_solve(csp, engine="ac3")
+    assert (sol is None) == (brute is None) == (sol3 is None)
+    if sol is not None:
+        assert check_solution(csp, sol) and check_solution(csp, sol3)
+
+
+def test_coloring():
+    # cycle of length 5 needs 3 colours
+    n = 5
+    adj = np.zeros((n, n), bool)
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
+    sol2, _ = mac_solve(coloring_csp(adj, 2))
+    assert sol2 is None
+    sol3, _ = mac_solve(coloring_csp(adj, 3))
+    assert sol3 is not None and check_solution(coloring_csp(adj, 3), sol3)
+
+
+def test_rtac_and_ac3_agree_on_assignment_counts():
+    """Same heuristic + same propagation strength => identical search trees."""
+    csp = nqueens_csp(7)
+    _, st_r = mac_solve(csp, engine="rtac")
+    _, st_a = mac_solve(csp, engine="ac3")
+    assert st_r.n_assignments == st_a.n_assignments
+    assert st_r.n_backtracks == st_a.n_backtracks
+
+
+def test_budget_cap():
+    csp = nqueens_csp(10)
+    sol, stats = mac_solve(csp, engine="rtac", max_assignments=3)
+    assert stats.n_assignments <= 4

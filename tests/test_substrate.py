@@ -1,0 +1,216 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault tolerance,
+MoE invariants, layer properties."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, make_batch_np
+from repro.optim.adamw import AdamW, constant_schedule, cosine_schedule, global_norm
+
+
+# --------------------------- optimizer --------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=constant_schedule(0.1), weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=constant_schedule(0.0), clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, metrics = opt.update({"w": jnp.full(3, 100.0)}, state, params)
+    assert float(metrics["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert abs(float(lr(jnp.array(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.array(100))) < float(lr(jnp.array(50)))
+
+
+def test_bf16_moments_still_converge():
+    opt = AdamW(lr=constant_schedule(0.1), weight_decay=0.0, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.array([4.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        params, state, _ = opt.update({"w": 2 * params["w"]}, state, params)
+    assert abs(float(params["w"][0])) < 0.2
+    assert state.m["w"].dtype == jnp.bfloat16
+
+
+# --------------------------- data pipeline ----------------------------------
+
+
+def test_data_deterministic_and_stateless():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=4)
+    b1 = make_batch_np(cfg, 7)
+    b2 = make_batch_np(cfg, 7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch_np(cfg, 8)
+    assert (b1["tokens"] != b3["tokens"]).any()
+
+
+def test_data_restart_exactness():
+    """A restarted consumer sees exactly the stream a healthy one would."""
+    cfg = DataConfig(vocab=50, seq_len=16, global_batch=2)
+    healthy = [make_batch_np(cfg, s)["tokens"] for s in range(10)]
+    restarted = [make_batch_np(cfg, s)["tokens"] for s in range(5, 10)]
+    for a, b in zip(healthy[5:], restarted):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=2)
+    b = make_batch_np(cfg, 0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["loss_mask"][:, -1] == 0).all()
+
+
+# --------------------------- checkpointing ----------------------------------
+
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "n": {"b": jnp.ones((4,), jnp.bfloat16), "s": jnp.zeros((), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    mgr.save(3, tree)
+    out = mgr.restore(3, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_latest_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_async_and_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save_async(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    out = mgr.restore(5, _tree())
+    assert out["n"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree())
+    # simulate a crash mid-write: stray tmp dir + step dir without manifest
+    (tmp_path / "tmp.99.123").mkdir()
+    (tmp_path / "step_0000000099").mkdir()
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+
+
+# --------------------------- fault tolerance (train resume) -----------------
+
+
+def test_train_resume_is_bit_deterministic(tmp_path):
+    from repro.launch.train import train
+
+    kw = dict(
+        arch="qwen1.5-0.5b", smoke=True, seq_len=32, global_batch=2,
+        ckpt_every=5, log_every=1000,
+    )
+    full = train(steps=10, ckpt_dir=str(tmp_path / "a"), **kw)
+    # interrupted run: first 5 steps, then a fresh process-equivalent resume
+    train(steps=5, ckpt_dir=str(tmp_path / "b"), **kw)
+    resumed = train(steps=10, ckpt_dir=str(tmp_path / "b"), **kw)
+    np.testing.assert_allclose(full[5:], resumed, rtol=1e-5)
+
+
+# --------------------------- MoE invariants ---------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_moe_routing_invariants(seed):
+    from repro.configs import get_config, smoke_config
+    from repro.models.moe import apply_moe, moe_decls
+    from repro.models.param import init_params
+
+    cfg = smoke_config(get_config("qwen3-moe-235b-a22b"))
+    p = init_params(jax.random.PRNGKey(seed), moe_decls(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, cfg.d_model), jnp.float32)
+    y, aux = apply_moe(p, x, cfg, capacity_factor=8.0)  # big capacity: no drops
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux["moe_aux_loss"]) > 0.0
+    # with no drops, scaling gates by top-k renormalization keeps output
+    # bounded by max expert response; just check nonzero flow per token
+    assert float(jnp.mean(jnp.abs(y))) > 0.0
+
+
+def test_moe_capacity_dropping_zeroes_overflow():
+    from repro.configs import get_config, smoke_config
+    from repro.models.moe import apply_moe, moe_decls
+    from repro.models.param import init_params
+
+    cfg = smoke_config(get_config("qwen3-moe-235b-a22b"))
+    p = init_params(jax.random.PRNGKey(0), moe_decls(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model), jnp.float32)
+    y_small, _ = apply_moe(p, x, cfg, capacity_factor=0.1)
+    y_big, _ = apply_moe(p, x, cfg, capacity_factor=8.0)
+    # tighter capacity must strictly reduce total routed mass
+    assert float(jnp.sum(jnp.abs(y_small))) < float(jnp.sum(jnp.abs(y_big)))
+
+
+# --------------------------- layer properties -------------------------------
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.models.layers import apply_mrope, apply_rope
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[..., None], (2, 8, 3))
+    a = apply_rope(x, pos, 10000.0)
+    b = apply_mrope(x, pos3, 10000.0, (4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_swa_equals_full_when_window_covers_seq():
+    from repro.models.layers import _sdpa
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16), jnp.float32)
+    full = _sdpa(q, k, v, causal=True)
+    swa = _sdpa(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(swa), atol=1e-6)
+
+
+def test_chunked_attention_matches_unchunked():
+    from repro.models.layers import _sdpa, sdpa_chunked
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 4, 8), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 4, 8), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 4, 8), jnp.float32)
+    a = _sdpa(q, k, v, causal=True)
+    b = sdpa_chunked(q, k, v, causal=True, window=0, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
