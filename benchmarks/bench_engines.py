@@ -1,0 +1,98 @@
+"""Per-engine enforce latency on a fixed grid slice -> BENCH_engines.json.
+
+The perf-trajectory tracker: every registered engine enforces the same sampled
+assignments against its prepared-once network on 3 cells of the paper's §5.2
+grid; median per-enforcement latency (and prepare time) land in
+``BENCH_engines.json`` at the repo root so successive PRs can diff them.
+
+    PYTHONPATH=src python -m benchmarks.run --only engines
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import CSPBenchSpec, assign_np
+from repro.engines import available_engines, get_engine
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
+
+# 3 cells: sparse / medium / dense. n kept CI-sized — the tracked quantity is
+# the *relative* per-engine trajectory across PRs, not paper-scale absolutes.
+CELLS = [
+    CSPBenchSpec(n_vars=60, density=0.10),
+    CSPBenchSpec(n_vars=60, density=0.50),
+    CSPBenchSpec(n_vars=60, density=1.00),
+]
+
+
+def bench_cell(engine_name: str, spec: CSPBenchSpec, n_assignments: int = 8, seed: int = 0) -> dict:
+    csp = spec.build()
+    n, _ = csp.dom.shape
+    rng = np.random.default_rng(seed)
+    eng = get_engine(engine_name)
+
+    t0 = time.perf_counter()
+    prepared = eng.prepare(csp)
+    root = prepared.enforce()
+    jax.block_until_ready(root.dom)  # include first-compile in prepare_ms
+    prepare_ms = 1e3 * (time.perf_counter() - t0)
+    if not bool(root.consistent):
+        return {"n_vars": spec.n_vars, "density": spec.density, "inconsistent_root": True}
+    root_np = np.asarray(root.dom)
+
+    sites = []
+    for _ in range(n_assignments):
+        var = int(rng.integers(n))
+        vals = np.nonzero(root_np[var])[0]
+        sites.append((var, int(rng.choice(vals))))
+
+    lat = []
+    for var, val in sites:
+        ch = np.zeros((n,), bool)
+        ch[var] = True
+        dom_a = assign_np(root_np, var, val)
+        t0 = time.perf_counter()
+        r = prepared.enforce(dom_a, ch)
+        jax.block_until_ready(r.dom)  # no D2H copy inside the timed region
+        lat.append(1e3 * (time.perf_counter() - t0))
+    return {
+        "n_vars": spec.n_vars,
+        "density": spec.density,
+        "prepare_ms": round(prepare_ms, 3),
+        "enforce_ms_median": round(float(np.median(lat)), 3),
+        "enforce_ms_mean": round(float(np.mean(lat)), 3),
+        "n_assignments": n_assignments,
+    }
+
+
+def main(engines=None, out_path: Path = OUT_PATH) -> dict:
+    engines = list(engines) if engines else available_engines()
+    report = {
+        "schema": "bench_engines/v1",
+        "platform": platform.platform(),
+        "engines": {},
+    }
+    for name in engines:
+        cells = [bench_cell(name, spec) for spec in CELLS]
+        report["engines"][name] = cells
+        for c in cells:
+            if c.get("inconsistent_root"):
+                continue
+            print(
+                f"engines,{name},{c['n_vars']},{c['density']:.2f},"
+                f"{c['prepare_ms']:.3f},{c['enforce_ms_median']:.3f}"
+            )
+    out_path.write_text(json.dumps(report, indent=1))
+    print(f"engines: wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -6,39 +6,41 @@ each with changed={var} — the paper's per-assignment statistics without the
 50K-node search budget (deviation noted in EXPERIMENTS.md; trend and magnitude
 are the claims under test: #Recurrence flat in ~[3,5], #Revision growing with
 n·density).
+
+Each engine prepares the network ONCE per cell (`Engine.prepare`) and enforces
+all sampled assignments against the resident prepared form.
 """
 
 from __future__ import annotations
 
 import time
-from typing import List, Optional
+from typing import List
 
+import jax
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import CSPBenchSpec, assign, enforce, enforce_ac3, assign_np
+from repro.core import CSPBenchSpec, assign_np
+from repro.engines import get_engine
 
 
 def run_cell(
     spec: CSPBenchSpec,
     n_assignments: int = 20,
-    engines=("rtac", "ac3"),
+    engines=("einsum", "ac3"),
     seed: int = 0,
 ) -> dict:
     csp = spec.build()
     n, d = csp.dom.shape
-    cons_np, mask_np = np.asarray(csp.cons), np.asarray(csp.mask)
     rng = np.random.default_rng(seed)
 
     out = {"spec": spec, "n_vars": spec.n_vars, "density": spec.density}
 
-    # root closure (shared)
-    root = enforce(csp.cons, csp.mask, csp.dom)
+    # root closure (shared across engines)
+    root = get_engine("einsum").prepare(csp).enforce()
     if not bool(root.consistent):
         out["inconsistent_root"] = True
         return out
     root_np = np.asarray(root.dom)
-    root_j = jnp.asarray(root_np)
 
     # sample assignment sites once, reuse across engines
     sites = []
@@ -47,34 +49,29 @@ def run_cell(
         vals = np.nonzero(root_np[var])[0]
         sites.append((var, int(rng.choice(vals))))
 
-    if "rtac" in engines:
-        ks, times = [], []
-        # warmup compile
-        ch0 = jnp.zeros((n,), jnp.bool_).at[0].set(True)
-        enforce(csp.cons, csp.mask, root_j, ch0).dom.block_until_ready()
-        for var, val in sites:
-            dom_a = assign(root_j, var, val)
-            ch = jnp.zeros((n,), jnp.bool_).at[var].set(True)
-            t0 = time.perf_counter()
-            r = enforce(csp.cons, csp.mask, dom_a, ch)
-            r.dom.block_until_ready()
-            times.append(time.perf_counter() - t0)
-            ks.append(int(r.n_recurrences))
-        out["rtac_recurrences"] = float(np.mean(ks))
-        out["rtac_ms"] = 1e3 * float(np.mean(times))
+    for name in engines:
+        eng = get_engine(name)
+        prepared = eng.prepare(csp)  # once per cell — the expensive part
+        # warmup compile on the first site's shape
+        var0, val0 = sites[0]
+        ch0 = np.zeros((n,), bool)
+        ch0[var0] = True
+        r = prepared.enforce(assign_np(root_np, var0, val0), ch0)
+        jax.block_until_ready(r.dom)
 
-    if "ac3" in engines:
-        revs, times = [], []
+        counts, times = [], []
         for var, val in sites:
             dom_a = assign_np(root_np, var, val)
             ch = np.zeros((n,), bool)
             ch[var] = True
             t0 = time.perf_counter()
-            r = enforce_ac3(cons_np, mask_np, dom_a, ch)
+            r = prepared.enforce(dom_a, ch)
+            jax.block_until_ready(r.dom)  # no D2H copy inside the timed region
             times.append(time.perf_counter() - t0)
-            revs.append(r.n_revisions)
-        out["ac3_revisions"] = float(np.mean(revs))
-        out["ac3_ms"] = 1e3 * float(np.mean(times))
+            counts.append(int(np.asarray(r.n_recurrences)))
+        key = "revisions" if eng.count_unit == "revisions" else "recurrences"
+        out[f"{name}_{key}"] = float(np.mean(counts))
+        out[f"{name}_ms"] = 1e3 * float(np.mean(times))
     return out
 
 
@@ -103,8 +100,8 @@ def main(quick: bool = True):
         print(
             f"table1,{r['n_vars']},{r['density']:.2f},"
             f"{r.get('ac3_revisions', float('nan')):.1f},"
-            f"{r.get('rtac_recurrences', float('nan')):.3f},"
-            f"{r.get('ac3_ms', float('nan')):.3f},{r.get('rtac_ms', float('nan')):.3f}"
+            f"{r.get('einsum_recurrences', float('nan')):.3f},"
+            f"{r.get('ac3_ms', float('nan')):.3f},{r.get('einsum_ms', float('nan')):.3f}"
         )
     return rows
 

@@ -5,6 +5,8 @@ Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
 
   table1   paper Table 1 — #Revision (AC3) vs #Recurrence (RTAC) per assignment
   fig3     paper Fig. 3 — per-assignment enforcement time (+ batched variant)
+  engines  per-engine enforce latency on 3 grid cells -> BENCH_engines.json
+           (the cross-PR perf trajectory)
   roofline deliverable (g) — three-term roofline per dry-run artifact (reads
            artifacts/dryrun; run `python -m repro.launch.dryrun --all` first)
 """
@@ -19,7 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale grid")
     ap.add_argument(
-        "--only", choices=["table1", "fig3", "roofline"], default=None
+        "--only", choices=["table1", "fig3", "engines", "roofline"], default=None
     )
     args = ap.parse_args()
     quick = not args.full
@@ -32,6 +34,10 @@ def main() -> None:
         from . import bench_fig3
 
         bench_fig3.main(quick=quick)
+    if args.only in (None, "engines"):
+        from . import bench_engines
+
+        bench_engines.main()
     if args.only in (None, "roofline"):
         from . import roofline
 

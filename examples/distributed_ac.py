@@ -17,11 +17,10 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import enforce, random_csp
-from repro.core.sharded import make_sharded_enforcer, shard_csp_arrays
+from repro.core import random_csp
+from repro.engines import get_engine
 from repro.launch.mesh import make_mesh
 
 
@@ -39,23 +38,23 @@ def main():
         keep = rng.integers(16)
         doms[i, var, :] = False
         doms[i, var, keep] = True
-    dom_b = jnp.asarray(doms)
-    changed_b = jnp.ones((B, 64), jnp.bool_)
 
-    enf = make_sharded_enforcer(mesh)
-    cons_s, mask_s, dom_s = shard_csp_arrays(mesh, csp.cons, csp.mask, dom_b)
-    res = enf(cons_s, mask_s, dom_s, changed_b)  # compile+run
+    # prepare once: shards the constraint x-rows over 'model' and builds the
+    # jitted shard_map fixpoint; the hot path ships only the domain batch
+    prepared = get_engine("sharded", mesh=mesh).prepare(csp)
+    res = prepared.enforce_batch(doms)  # compile+run
     res.dom.block_until_ready()
     t0 = time.perf_counter()
-    res = enf(cons_s, mask_s, dom_s, changed_b)
+    res = prepared.enforce_batch(doms)
     res.dom.block_until_ready()
     dt = time.perf_counter() - t0
     print(f"batch of {B} enforcements: {1e3*dt:.1f} ms "
           f"(consistent: {np.asarray(res.consistent).tolist()})")
 
     # verify against the single-device path
+    ref_prepared = get_engine("einsum").prepare(csp)
     for i in range(B):
-        ref = enforce(csp.cons, csp.mask, dom_b[i])
+        ref = ref_prepared.enforce(doms[i])
         assert bool(ref.consistent) == bool(res.consistent[i])
         if bool(ref.consistent):
             assert (np.asarray(ref.dom) == np.asarray(res.dom[i])).all()

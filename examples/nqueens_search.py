@@ -20,16 +20,19 @@ def board(sol):
 
 def main(n: int = 10):
     csp = nqueens_csp(n)
-    for engine in ("rtac", "ac3"):
+    for engine in ("einsum", "ac3"):
         t0 = time.perf_counter()
         sol, stats = mac_solve(csp, engine=engine)
         dt = time.perf_counter() - t0
         assert sol is not None and check_solution(csp, sol)
-        unit = "recurrences" if engine.startswith("rtac") else "revisions"
+        if engine == "ac3":
+            unit, mean = "revisions", stats.mean_revisions
+        else:
+            unit, mean = "recurrences", stats.mean_recurrences
         print(
-            f"[{engine:4s}] {n}-queens solved in {dt:.2f}s, "
+            f"[{engine:6s}] {n}-queens solved in {dt:.2f}s, "
             f"{stats.n_assignments} assignments, "
-            f"mean {stats.mean_recurrences:.1f} {unit}/enforcement, "
+            f"mean {mean:.1f} {unit}/enforcement, "
             f"mean {stats.mean_enforce_ms:.2f} ms/enforcement"
         )
     print(board(sol))

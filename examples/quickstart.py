@@ -9,12 +9,8 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import (
-    check_solution,
-    enforce_csp,
-    mac_solve,
-    random_csp,
-)
+from repro.core import check_solution, mac_solve, random_csp
+from repro.engines import get_engine
 
 
 def main():
@@ -23,14 +19,17 @@ def main():
     print(f"CSP: {csp.n_vars} vars, |dom|={csp.dom_size}, "
           f"{int(np.asarray(csp.mask).sum()) // 2} constraints")
 
-    # 1. one-shot arc consistency enforcement (Eq. 1 fixpoint on device)
-    res = enforce_csp(csp)
+    # 1. prepare the network once, then enforce arc consistency (Eq. 1
+    #    fixpoint, device-resident) against the prepared form
+    prepared = get_engine("einsum").prepare(csp)
+    res = prepared.enforce()
     removed = int(np.asarray(csp.dom).sum() - np.asarray(res.dom).sum())
     print(f"RTAC: consistent={bool(res.consistent)} "
           f"recurrences={int(res.n_recurrences)} values_removed={removed}")
 
-    # 2. full MAC backtrack search (paper Alg. 2), batched child enforcement
-    sol, stats = mac_solve(csp, engine="rtac", batched_children=True)
+    # 2. full MAC backtrack search (paper Alg. 2); all candidate values of the
+    #    branching variable are enforced in ONE batched dispatch by default
+    sol, stats = mac_solve(csp, engine="einsum")
     if sol is None:
         print("no solution")
     else:

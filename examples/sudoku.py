@@ -28,7 +28,7 @@ PUZZLE = np.array(
 
 def main():
     csp = sudoku_csp(PUZZLE)
-    sol, stats = mac_solve(csp, engine="rtac", batched_children=True)
+    sol, stats = mac_solve(csp, engine="einsum")
     assert sol is not None, "puzzle should be solvable"
     grid = np.asarray(sol).reshape(9, 9) + 1
     for r in range(9):

@@ -20,10 +20,12 @@ from .rtac import (
     enforce_batch,
     enforce_csp,
     enforce_full,
+    enforce_full_batch,
 )
-from .ac3 import AC3Result, enforce_ac3, assign_np
+from .ac3 import AC3Result, build_neighbours, enforce_ac3, assign_np
 from .brute import ac_closure_brute, count_solutions, solve_brute
-from .search import SearchStats, check_solution, mac_solve
+from .engine import Engine, PreparedNetwork
+from .search import SearchStats, check_solution, mac_solve, resolve_engine
 
 __all__ = [
     "CSP",
@@ -43,13 +45,18 @@ __all__ = [
     "enforce_batch",
     "enforce_csp",
     "enforce_full",
+    "enforce_full_batch",
     "AC3Result",
+    "build_neighbours",
     "enforce_ac3",
     "assign_np",
     "ac_closure_brute",
     "count_solutions",
     "solve_brute",
+    "Engine",
+    "PreparedNetwork",
     "SearchStats",
     "check_solution",
     "mac_solve",
+    "resolve_engine",
 ]

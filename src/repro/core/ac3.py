@@ -20,15 +20,22 @@ class AC3Result(NamedTuple):
     n_revisions: int
 
 
+def build_neighbours(mask: np.ndarray) -> list:
+    """Adjacency lists — the host-side 'prepared network' for AC3."""
+    return [np.nonzero(mask[x])[0] for x in range(mask.shape[0])]
+
+
 def enforce_ac3(
     cons: np.ndarray,  # (n, n, d, d) bool
     mask: np.ndarray,  # (n, n) bool
     dom: np.ndarray,  # (n, d) bool
     changed0: Optional[np.ndarray] = None,  # (n,) bool — seed vars (None = all)
+    neighbours: Optional[list] = None,  # precomputed build_neighbours(mask)
 ) -> AC3Result:
     n = dom.shape[0]
     dom = dom.copy()
-    neighbours = [np.nonzero(mask[x])[0] for x in range(n)]
+    if neighbours is None:
+        neighbours = build_neighbours(mask)
 
     # Arc queue: (x, y) means "revise dom(x) against c_xy".
     queue: deque = deque()

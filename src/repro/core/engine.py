@@ -1,0 +1,182 @@
+"""The Engine protocol — prepare-once, enforce-many arc consistency (DESIGN.md §3).
+
+Every enforcement backend (einsum, paper-faithful full recompute, Pallas
+kernels, sharded, AC3) satisfies one small contract:
+
+    engine.prepare(csp)            -> PreparedNetwork       (expensive, once)
+    prepared.enforce(dom, ch)      -> EnforceResult         (hot path)
+    prepared.enforce_batch(doms, ch) -> EnforceResult       (B domains at once)
+
+``prepare`` does everything that depends only on the *constraint network*:
+padding the O(n²d²) constraint tensor to kernel tiles, bitpacking, reshaping,
+device placement / sharding, and constructing the (jit-cache-stable) revise
+closure. The per-call path touches only O(n·d) domain data. MAC search
+(`core/search.py`) calls ``prepare`` exactly once per CSP and then enforces
+thousands of candidate domains against the same prepared network — previously
+the kernel paths re-padded and re-bitpacked the constraint tensor on every
+single enforcement.
+
+``enforce``/``enforce_batch`` accept domains in *caller* coordinates
+(n, d) / (B, n, d); engines that pad internally (the Pallas backends) pad the
+domain per call and un-pad the result, so callers never see padded shapes.
+
+Padding contract (DESIGN.md §2): padded variables are unconstrained with a
+non-empty domain ({value 0}), so they never change, never violate, and never
+trip the wipeout check; padded values are absent from every domain and allowed
+by no constraint. The AC closure over the original (n, d) slice is unchanged.
+This module is the only place that implements that contract.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, ClassVar, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csp import CSP
+from .rtac import EnforceResult
+
+Array = jax.Array
+Changed = Optional[Union[Array, np.ndarray]]
+
+
+# ---------------------------------------------------------------------------
+# Padding contract — the ONE implementation (kernels and engines import these)
+# ---------------------------------------------------------------------------
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_network(csp: CSP, n_block: int, d_mult: int):
+    """Pad the *network* (cons, mask) to kernel tiles.
+
+    Returns (cons, mask, n_p, d_p). Padded pairs are unconstrained
+    (mask False, cons zero blocks) so they never produce a violation.
+    """
+    n, d = csp.dom.shape
+    n_p = round_up(max(n, n_block), n_block)
+    d_p = round_up(d, d_mult)
+    cons = jnp.pad(csp.cons, ((0, n_p - n), (0, n_p - n), (0, d_p - d), (0, d_p - d)))
+    mask = jnp.pad(csp.mask, ((0, n_p - n), (0, n_p - n)))
+    return cons, mask, n_p, d_p
+
+
+def pad_dom(dom: Array, n_p: int, d_p: int) -> Array:
+    """Pad a domain tensor (..., n, d) -> (..., n_p, d_p).
+
+    Padded variables get the singleton domain {0} (never empty → never trips
+    the wipeout check); padded values are False everywhere.
+    """
+    *batch, n, d = dom.shape
+    dom = jnp.pad(dom, [(0, 0)] * len(batch) + [(0, 0), (0, d_p - d)])
+    pad_rows = jnp.zeros((*batch, n_p - n, d_p), jnp.bool_).at[..., :, 0].set(True)
+    return jnp.concatenate([dom, pad_rows], axis=-2)
+
+
+def pad_changed(changed0: Changed, n: int, n_p: int, batch: tuple = ()) -> Array:
+    """Normalize+pad a changed seed (..., n) -> (..., n_p); None = all-changed.
+    Padded variables are never marked changed (their domains never shrink)."""
+    if changed0 is None:
+        changed0 = jnp.ones((*batch, n), jnp.bool_)
+    changed0 = jnp.asarray(changed0, dtype=jnp.bool_)
+    return jnp.pad(changed0, [(0, 0)] * len(batch) + [(0, n_p - n)])
+
+
+def as_changed(changed0: Changed) -> Optional[Array]:
+    """Normalize a caller-supplied changed seed to a jax bool array (or None)."""
+    if changed0 is None:
+        return None
+    return jnp.asarray(changed0, dtype=jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# PreparedNetwork + Engine
+# ---------------------------------------------------------------------------
+
+
+class PreparedNetwork:
+    """A CSP's constraint network compiled into one backend's resident form.
+
+    Holds the engine that built it, the source CSP (for shapes and the root
+    domain), and an opaque ``payload`` owned by the backend (padded/bitpacked
+    tensors, revise closures, sharded jitted functions, host-side adjacency —
+    whatever the backend's hot path needs so it never touches the raw CSP
+    again).
+    """
+
+    __slots__ = ("engine", "csp", "payload")
+
+    def __init__(self, engine: "Engine", csp: CSP, payload: Any):
+        self.engine = engine
+        self.csp = csp
+        self.payload = payload
+
+    @property
+    def n_vars(self) -> int:
+        return self.csp.dom.shape[0]
+
+    @property
+    def dom_size(self) -> int:
+        return self.csp.dom.shape[1]
+
+    def enforce(self, dom=None, changed0: Changed = None) -> EnforceResult:
+        """Enforce AC on one domain (n, d); ``dom=None`` uses the CSP's root
+        domain. ``changed0`` seeds the revision set (None = all variables)."""
+        if dom is None:
+            dom = self.csp.dom
+        return self.engine.enforce(self, dom, changed0)
+
+    def enforce_batch(self, doms, changed0: Changed = None) -> EnforceResult:
+        """Enforce AC on B domains (B, n, d) in one dispatch; result fields
+        carry a leading batch axis."""
+        return self.engine.enforce_batch(self, doms, changed0)
+
+
+class Engine(abc.ABC):
+    """One enforcement backend. Register concrete engines in `repro.engines`."""
+
+    #: registry key (and the string accepted by ``mac_solve(engine=...)``)
+    name: ClassVar[str]
+    #: unit of ``EnforceResult.n_recurrences`` — "recurrences" for the tensor
+    #: fixpoint backends (Table 1 #Recurrence), "revisions" for AC3
+    #: (Table 1 #Revision). `SearchStats` files counts accordingly.
+    count_unit: ClassVar[str] = "recurrences"
+    #: whether ``enforce_batch`` is genuinely one parallel dispatch. Sequential
+    #: host engines (AC3) set this False so MAC search enforces children
+    #: lazily one at a time — eager batching would do strictly more work there
+    #: and skew the per-assignment statistics.
+    supports_batch: ClassVar[bool] = True
+
+    def prepare(self, csp: CSP) -> PreparedNetwork:
+        """Compile the constraint network into this backend's resident form.
+        Called once per CSP; everything O(n²d²) happens here."""
+        return PreparedNetwork(self, csp, self._prepare_payload(csp))
+
+    @abc.abstractmethod
+    def _prepare_payload(self, csp: CSP) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def enforce(self, prepared: PreparedNetwork, dom, changed0: Changed = None) -> EnforceResult:
+        ...
+
+    def enforce_batch(self, prepared: PreparedNetwork, doms, changed0: Changed = None) -> EnforceResult:
+        """Generic fallback: loop on the host and stack. Device backends
+        override this with a single vmapped/sharded dispatch."""
+        results = [
+            self.enforce(prepared, doms[i], None if changed0 is None else changed0[i])
+            for i in range(len(doms))
+        ]
+        return EnforceResult(
+            dom=np.stack([np.asarray(r.dom) for r in results]),
+            consistent=np.asarray([bool(r.consistent) for r in results]),
+            n_recurrences=np.asarray([int(r.n_recurrences) for r in results]),
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<{type(self).__name__} name={self.name!r}>"

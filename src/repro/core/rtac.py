@@ -173,6 +173,18 @@ def enforce_full(
     return EnforceResult(final.dom, final.consistent, final.k)
 
 
+@functools.partial(jax.jit, static_argnames=("support_fn",))
+def enforce_full_batch(
+    cons: Array,
+    mask: Array,
+    dom: Array,  # (B, n, d)
+    support_fn: SupportFn = einsum_support,
+) -> EnforceResult:
+    """Batched paper-faithful recurrence: B domains, one shared network."""
+    fn = functools.partial(enforce_full.__wrapped__, cons, mask, support_fn=support_fn)
+    return jax.vmap(fn)(dom)
+
+
 # ---------------------------------------------------------------------------
 # Batched enforcement — the beyond-paper throughput lever (DESIGN.md §2):
 # one shared network, B candidate domains (search nodes / restarts) enforced

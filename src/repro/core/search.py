@@ -1,40 +1,55 @@
-"""MAC backtrack search (paper Alg. 2) over either enforcement engine.
+"""MAC backtrack search (paper Alg. 2) over any registered enforcement Engine.
 
-``mac_solve`` maintains arc consistency with RTAC (device-resident fixpoint) or
-AC3 (host baseline) after every assignment, recording per-assignment statistics —
-exactly the quantities of paper Table 1 (#Recurrence / #Revision averaged over
-assignments) and Fig. 3 (time per assignment).
+``mac_solve`` prepares the constraint network ONCE (`Engine.prepare`) and then
+maintains arc consistency after every assignment against the resident prepared
+network, recording per-assignment statistics — exactly the quantities of paper
+Table 1 (#Recurrence for the tensor engines / #Revision for AC3, averaged over
+assignments, kept in separate fields) and Fig. 3 (time per assignment).
 
-Beyond the paper: ``batched_children=True`` enforces ALL candidate values of the
-branching variable in one ``vmap``-batched fixpoint (one device dispatch per
-*node* instead of per *child*), which the sequential paradigm cannot express.
+Beyond the paper: the per-child loop is *frontier-batched by default* — all
+candidate values of the branching variable are enforced in one
+``enforce_batch`` dispatch (one device round-trip per search *node* instead of
+per *child*), which the sequential paradigm cannot express. Pass
+``batched_children=False`` for the classical one-child-at-a-time schedule.
+Engines with ``supports_batch=False`` (the sequential AC3 baseline, where
+eager batching is pure extra work) always use the classical schedule.
+
+``engine`` accepts an `Engine` instance or a registry name
+(`repro.engines.available_engines()`); the pre-Engine strings "rtac" /
+"rtac_full" still resolve (with a DeprecationWarning) for one release.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+import warnings
+from typing import List, Optional, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import ac3 as _ac3
-from . import rtac as _rtac
+from .ac3 import assign_np
 from .csp import CSP
+from .engine import Engine
 
 
 @dataclasses.dataclass
 class SearchStats:
     n_assignments: int = 0
     n_backtracks: int = 0
-    recurrences: List[int] = dataclasses.field(default_factory=list)  # per enforcement
+    # Per-enforcement work counters, SEPARATED by unit (Table 1 honesty):
+    # tensor-engine fixpoint recurrence counts vs AC3 revise-call counts.
+    recurrences: List[int] = dataclasses.field(default_factory=list)
+    revisions: List[int] = dataclasses.field(default_factory=list)
     enforce_seconds: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def mean_recurrences(self) -> float:
         return float(np.mean(self.recurrences)) if self.recurrences else 0.0
+
+    @property
+    def mean_revisions(self) -> float:
+        return float(np.mean(self.revisions)) if self.revisions else 0.0
 
     @property
     def mean_enforce_ms(self) -> float:
@@ -52,75 +67,86 @@ def _select_var(dom_np: np.ndarray, assigned: np.ndarray) -> int:
     return int(np.argmin(sizes))
 
 
+def resolve_engine(engine: Union[Engine, str], support_fn=None) -> Engine:
+    """Engine instance passthrough, or registry lookup by name (legacy names
+    warn). ``support_fn`` is honoured by the einsum-contraction engines."""
+    if isinstance(engine, Engine):
+        if support_fn is not None:
+            warnings.warn(
+                "support_fn is ignored when an Engine instance is passed",
+                stacklevel=3,
+            )
+        return engine
+    from repro.engines import get_engine
+
+    opts = {}
+    if support_fn is not None and engine in ("rtac", "rtac_full", "einsum", "full"):
+        opts["support_fn"] = support_fn
+    return get_engine(engine, **opts)
+
+
 def mac_solve(
     csp: CSP,
-    engine: str = "rtac",  # "rtac" | "rtac_full" | "ac3"
-    support_fn=_rtac.einsum_support,
+    engine: Union[Engine, str] = "einsum",
+    support_fn=None,
     max_assignments: Optional[int] = None,
-    batched_children: bool = False,
+    batched_children: bool = True,
     collect_stats: bool = True,
 ) -> tuple[Optional[List[int]], SearchStats]:
     """Returns (solution | None, stats). Raises nothing on budget exhaustion —
     stops and returns (None, stats) with ``stats.n_assignments`` at the cap."""
+    eng = resolve_engine(engine, support_fn)
+    prepared = eng.prepare(csp)  # the ONLY preparation in the whole run
     stats = SearchStats()
-    n, d = csp.dom.shape
-    cons_np = np.asarray(csp.cons)
-    mask_np = np.asarray(csp.mask)
+    n, _ = csp.dom.shape
+    counts = stats.recurrences if eng.count_unit == "recurrences" else stats.revisions
 
-    use_ac3 = engine == "ac3"
-    if engine == "rtac":
-        enf = lambda dom, ch: _rtac.enforce(csp.cons, csp.mask, dom, ch, support_fn=support_fn)
-    elif engine == "rtac_full":
-        enf = lambda dom, ch: _rtac.enforce_full(csp.cons, csp.mask, dom, support_fn=support_fn)
-    elif engine != "ac3":
-        raise ValueError(f"unknown engine {engine!r}")
-
-    def enforce_from(dom, changed_idx: Optional[int]):
-        """Run enforcement; returns (dom', consistent, count)."""
-        t0 = time.perf_counter()
-        if use_ac3:
-            ch = None
-            if changed_idx is not None:
-                ch = np.zeros((n,), bool)
-                ch[changed_idx] = True
-            res = _ac3.enforce_ac3(cons_np, mask_np, np.asarray(dom), ch)
-            out = (res.dom, res.consistent, res.n_revisions)
-        else:
-            ch = None
-            if changed_idx is not None:
-                ch = jnp.zeros((n,), jnp.bool_).at[changed_idx].set(True)
-            res = enf(dom, ch)
-            out = (res.dom, bool(res.consistent), int(res.n_recurrences))
+    def record(t0: float, ks) -> None:
         if collect_stats:
             stats.enforce_seconds.append(time.perf_counter() - t0)
-            stats.recurrences.append(out[2])
-        return out
+            counts.extend(int(k) for k in np.atleast_1d(ks))
+
+    def enforce_one(dom_np: np.ndarray, changed_idx: Optional[int]):
+        """-> (dom' np, consistent). One domain, one dispatch."""
+        ch = None
+        if changed_idx is not None:
+            ch = np.zeros((n,), bool)
+            ch[changed_idx] = True
+        t0 = time.perf_counter()
+        res = prepared.enforce(dom_np, ch)
+        record(t0, res.n_recurrences)
+        return np.asarray(res.dom), bool(res.consistent)
 
     # Root propagation (Alg. 2 line 3).
-    dom0, ok, _ = enforce_from(csp.dom, None)
+    dom0, ok = enforce_one(np.asarray(csp.dom), None)
     if not ok:
         return None, stats
 
     assigned = np.zeros((n,), dtype=bool)
 
-    def dfs(dom) -> Optional[List[int]]:
-        dom_np = np.asarray(dom)
+    def dfs(dom_np: np.ndarray) -> Optional[List[int]]:
         if assigned.all():
             return [int(np.argmax(dom_np[x])) for x in range(n)]
         var = _select_var(dom_np, assigned)
         values = [int(v) for v in np.nonzero(dom_np[var])[0]]
 
         child_results = None
-        if batched_children and not use_ac3 and len(values) > 1:
-            doms = jnp.stack(
-                [_rtac.assign(jnp.asarray(dom), var, v) for v in values]
+        if batched_children and eng.supports_batch and len(values) > 1:
+            b = len(values)
+            # bucket B up to a power of two (repeating the last child — the
+            # fixpoint is idempotent per element) so the jitted batched
+            # enforcement compiles O(log d) shapes instead of one per frontier
+            # size; results are sliced back to the true frontier below.
+            b_p = 1 << (b - 1).bit_length()
+            doms = np.stack(
+                [assign_np(dom_np, var, v) for v in values]
+                + [assign_np(dom_np, var, values[-1])] * (b_p - b)
             )
-            ch = jnp.zeros((len(values), n), jnp.bool_).at[:, var].set(True)
+            ch = np.zeros((b_p, n), bool)
+            ch[:, var] = True
             t0 = time.perf_counter()
-            res = _rtac.enforce_batch(csp.cons, csp.mask, doms, ch, support_fn=support_fn)
-            if collect_stats:
-                stats.enforce_seconds.append(time.perf_counter() - t0)
-                stats.recurrences.extend(int(k) for k in res.n_recurrences)
+            res = prepared.enforce_batch(doms, ch)
+            record(t0, np.asarray(res.n_recurrences)[:b])
             child_results = res
 
         assigned[var] = True
@@ -131,13 +157,9 @@ def mac_solve(
                     raise BudgetExceeded
                 if child_results is not None:
                     ok_i = bool(child_results.consistent[i])
-                    dom_i = child_results.dom[i]
+                    dom_i = np.asarray(child_results.dom[i])
                 else:
-                    if use_ac3:
-                        dom_a = _ac3.assign_np(dom_np, var, val)
-                    else:
-                        dom_a = _rtac.assign(jnp.asarray(dom), var, val)
-                    dom_i, ok_i, _ = enforce_from(dom_a, var)
+                    dom_i, ok_i = enforce_one(assign_np(dom_np, var, val), var)
                 if ok_i:
                     sol = dfs(dom_i)
                     if sol is not None:

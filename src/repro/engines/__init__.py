@@ -1,0 +1,89 @@
+"""Engine registry — every enforcement backend behind one protocol (DESIGN.md §3).
+
+    from repro.engines import get_engine
+    eng = get_engine("pallas_packed")
+    prepared = eng.prepare(csp)            # pad + bitpack + place, ONCE
+    res = prepared.enforce(dom, changed0)  # hot path: O(n·d) host work
+
+Registered backends:
+
+    einsum        incremental RTAC (Prop. 2), XLA einsum contraction
+    full          paper-faithful dense recurrence (Eq. 1, no incrementality)
+    pallas_dense  incremental RTAC, dense uint8 Pallas revise kernel
+    pallas_packed incremental RTAC, bitpacked uint32 Pallas revise kernel
+    sharded       shard_map fixpoint over a device mesh (cons x-rows on
+                  'model', domain batch on 'data')
+    ac3           queue-based host baseline (paper §5.1); counts revisions
+
+Legacy string names ("rtac", "rtac_full") from the pre-Engine ``mac_solve``
+signature resolve with a DeprecationWarning for one release.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Dict, List, Type
+
+from repro.core.engine import Engine, PreparedNetwork
+
+_REGISTRY: Dict[str, Type[Engine]] = {}
+
+# pre-Engine spelling -> registry key (kept one release; warns on use)
+DEPRECATED_ALIASES = {
+    "rtac": "einsum",
+    "rtac_full": "full",
+}
+
+
+def register(cls: Type[Engine]) -> Type[Engine]:
+    """Class decorator: register an Engine subclass under ``cls.name``."""
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_engines() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_engine(name: str, **opts) -> Engine:
+    """Instantiate a registered engine by name (``opts`` go to its __init__)."""
+    if name in DEPRECATED_ALIASES:
+        canonical = DEPRECATED_ALIASES[name]
+        warnings.warn(
+            f"engine name {name!r} is deprecated; use {canonical!r}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        name = canonical
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown engine {name!r}; available: {available_engines()}")
+    return _REGISTRY[name](**opts)
+
+
+# Import for side effect: each module registers its engines.
+from . import einsum as _einsum  # noqa: E402
+from . import pallas as _pallas  # noqa: E402
+from . import sharded as _sharded  # noqa: E402
+from . import ac3 as _ac3  # noqa: E402
+
+EinsumEngine = _einsum.EinsumEngine
+FullEngine = _einsum.FullEngine
+PallasDenseEngine = _pallas.PallasDenseEngine
+PallasPackedEngine = _pallas.PallasPackedEngine
+ShardedEngine = _sharded.ShardedEngine
+AC3Engine = _ac3.AC3Engine
+
+__all__ = [
+    "Engine",
+    "PreparedNetwork",
+    "register",
+    "get_engine",
+    "available_engines",
+    "DEPRECATED_ALIASES",
+    "EinsumEngine",
+    "FullEngine",
+    "PallasDenseEngine",
+    "PallasPackedEngine",
+    "ShardedEngine",
+    "AC3Engine",
+]

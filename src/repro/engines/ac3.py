@@ -1,0 +1,42 @@
+"""AC3 engine — the sequential host baseline (paper §5.1) behind the Engine
+protocol. ``prepare`` converts the constraint tensors to numpy and builds the
+adjacency lists once; ``count_unit`` is "revisions" (paper Table 1 #Revision),
+which `SearchStats` files separately from the tensor engines' recurrences.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ac3 as _ac3
+from repro.core.csp import CSP
+from repro.core.engine import Engine, PreparedNetwork
+from repro.core.rtac import EnforceResult
+from . import register
+
+
+@register
+class AC3Engine(Engine):
+    name = "ac3"
+    count_unit = "revisions"
+    # sequential baseline: a "batch" is just a host loop, so eager frontier
+    # batching in search would waste work — enforce children lazily instead
+    supports_batch = False
+
+    def _prepare_payload(self, csp: CSP):
+        cons = np.asarray(csp.cons)
+        mask = np.asarray(csp.mask)
+        return cons, mask, _ac3.build_neighbours(mask)
+
+    def enforce(self, prepared: PreparedNetwork, dom, changed0=None) -> EnforceResult:
+        cons, mask, neighbours = prepared.payload
+        if changed0 is not None:
+            changed0 = np.asarray(changed0, dtype=bool)
+        res = _ac3.enforce_ac3(
+            cons, mask, np.asarray(dom), changed0, neighbours=neighbours
+        )
+        # n_recurrences carries this engine's native unit: revisions.
+        return EnforceResult(res.dom, res.consistent, res.n_revisions)
+
+    # enforce_batch: the generic host-loop fallback in Engine is already the
+    # right (only) semantics for a sequential baseline.

@@ -1,0 +1,71 @@
+"""Einsum engines — the XLA-contraction RTAC backends (no Pallas, no padding).
+
+``einsum`` is the incremental fixpoint of Prop. 2 (the default engine);
+``full`` is the paper-faithful bare recurrence of Eq. 1, recomputing the
+support test for every (x, a) each step — kept as the fidelity baseline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rtac
+from repro.core.csp import CSP
+from repro.core.engine import Engine, PreparedNetwork, as_changed
+from repro.core.rtac import EnforceResult, SupportFn, einsum_support
+from . import register
+
+
+def _revise_for(support_fn: SupportFn):
+    """Module-level-stable revise closure (keys `enforce_generic`'s jit cache)."""
+    if support_fn is einsum_support:
+        return rtac._EINSUM_REVISE
+    return rtac._REVISE_CACHE.setdefault(support_fn, rtac.make_einsum_revise(support_fn))
+
+
+@register
+class EinsumEngine(Engine):
+    """Incremental RTAC (Prop. 2) with the einsum support contraction."""
+
+    name = "einsum"
+
+    def __init__(self, support_fn: SupportFn = einsum_support):
+        self.support_fn = support_fn
+        self._revise_fn = _revise_for(support_fn)
+
+    def _prepare_payload(self, csp: CSP):
+        return (csp.cons, csp.mask)
+
+    def enforce(self, prepared: PreparedNetwork, dom, changed0=None) -> EnforceResult:
+        return rtac.enforce_generic(
+            prepared.payload, jnp.asarray(dom), as_changed(changed0),
+            revise_fn=self._revise_fn,
+        )
+
+    def enforce_batch(self, prepared: PreparedNetwork, doms, changed0=None) -> EnforceResult:
+        return rtac.enforce_batch_generic(
+            prepared.payload, jnp.asarray(doms), as_changed(changed0),
+            revise_fn=self._revise_fn,
+        )
+
+
+@register
+class FullEngine(Engine):
+    """Paper-faithful dense recurrence (Eq. 1). Ignores ``changed0`` — every
+    step re-tests all (x, a) pairs, exactly as published."""
+
+    name = "full"
+
+    def __init__(self, support_fn: SupportFn = einsum_support):
+        self.support_fn = support_fn
+
+    def _prepare_payload(self, csp: CSP):
+        return (csp.cons, csp.mask)
+
+    def enforce(self, prepared: PreparedNetwork, dom, changed0=None) -> EnforceResult:
+        cons, mask = prepared.payload
+        return rtac.enforce_full(cons, mask, jnp.asarray(dom), support_fn=self.support_fn)
+
+    def enforce_batch(self, prepared: PreparedNetwork, doms, changed0=None) -> EnforceResult:
+        cons, mask = prepared.payload
+        return rtac.enforce_full_batch(cons, mask, jnp.asarray(doms), support_fn=self.support_fn)

@@ -1,0 +1,110 @@
+"""Sharded engine — the shard_map fixpoint of `core/sharded.py` behind the
+Engine protocol (DESIGN.md §5).
+
+``prepare`` builds the jitted sharded enforcer once per (mesh, impl, dtype),
+device_puts the constraint x-rows onto the 'model' axis, and — for
+``impl="bitpacked"`` — packs the b-axis into uint32 words. The hot path only
+shards the O(B·n·d) domain batch over the batch axes. ``enforce`` is a batch
+of one; ``enforce_batch`` pads B up to a multiple of the batch-axis extent
+(repeating the last domain — enforcement is idempotent per element) and
+slices the result back.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.csp import CSP
+from repro.core.engine import Engine, PreparedNetwork
+from repro.core.rtac import EnforceResult
+from repro.core.sharded import make_sharded_enforcer
+from . import register
+
+
+def _default_mesh() -> Mesh:
+    """All host devices on the 'model' axis (constraint rows sharded; batch
+    replicated) — the right default for a one-process run."""
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((1, jax.device_count()), ("data", "model"))
+
+
+@register
+class ShardedEngine(Engine):
+    name = "sharded"
+
+    def __init__(
+        self,
+        mesh: Optional[Mesh] = None,
+        model_axis: str = "model",
+        batch_axes: Tuple[str, ...] = ("data",),
+        dtype=jnp.bfloat16,
+        impl: str = "einsum",  # "einsum" | "bitpacked"
+    ):
+        self.mesh = mesh if mesh is not None else _default_mesh()
+        self.model_axis = model_axis
+        self.batch_axes = batch_axes
+        self.dtype = dtype
+        self.impl = impl
+        self._batch_extent = math.prod(
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+            for a in batch_axes
+        )
+
+    def build_enforcer(self):
+        """The raw jitted (cons, mask, dom_batch, changed_batch) -> EnforceResult;
+        exposed for AOT lowering (launch/dryrun_rtac.py)."""
+        return make_sharded_enforcer(
+            self.mesh,
+            model_axis=self.model_axis,
+            batch_axes=self.batch_axes,
+            dtype=self.dtype,
+            impl=self.impl,
+        )
+
+    def _prepare_payload(self, csp: CSP):
+        cons = csp.cons
+        if self.impl == "bitpacked":
+            from repro.kernels.ref import pack_bits_ref
+
+            cons = pack_bits_ref(cons)  # (n, n, d, W) uint32
+        model_sh = NamedSharding(self.mesh, P(self.model_axis))
+        cons_s = jax.device_put(cons, model_sh)
+        mask_s = jax.device_put(csp.mask, model_sh)
+        return self.build_enforcer(), cons_s, mask_s
+
+    def _run(self, prepared: PreparedNetwork, doms: jax.Array, changed0) -> EnforceResult:
+        enf, cons_s, mask_s = prepared.payload
+        b, n = doms.shape[0], doms.shape[1]
+        if changed0 is None:
+            changed0 = jnp.ones((b, n), jnp.bool_)
+        changed0 = jnp.asarray(changed0, jnp.bool_)
+        # pad B to the batch-axis extent (shard_map needs even shards)
+        b_p = -(-b // self._batch_extent) * self._batch_extent
+        if b_p != b:
+            reps = [doms[-1:]] * (b_p - b)
+            doms = jnp.concatenate([doms] + reps, axis=0)
+            changed0 = jnp.concatenate([changed0] + [changed0[-1:]] * (b_p - b), axis=0)
+        batch_sh = NamedSharding(self.mesh, P(self.batch_axes))
+        doms = jax.device_put(doms, batch_sh)
+        changed0 = jax.device_put(changed0, batch_sh)
+        res = enf(cons_s, mask_s, doms, changed0)
+        if b_p != b:
+            res = EnforceResult(res.dom[:b], res.consistent[:b], res.n_recurrences[:b])
+        return res
+
+    def enforce(self, prepared: PreparedNetwork, dom, changed0=None) -> EnforceResult:
+        dom = jnp.asarray(dom)
+        if changed0 is not None:
+            changed0 = jnp.asarray(changed0, jnp.bool_)[None]
+        res = self._run(prepared, dom[None], changed0)
+        return EnforceResult(res.dom[0], res.consistent[0], res.n_recurrences[0])
+
+    def enforce_batch(self, prepared: PreparedNetwork, doms, changed0=None) -> EnforceResult:
+        return self._run(prepared, jnp.asarray(doms), changed0)

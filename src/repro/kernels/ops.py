@@ -1,14 +1,17 @@
 """Jitted wrappers binding the Pallas revise kernels into the RTAC fixpoint.
 
 Handles the shape contract between the algorithm (n vars × d values, any sizes)
-and the kernels (padded, flattened, optionally bitpacked):
+and the kernels (padded, flattened, optionally bitpacked). The padding contract
+itself lives in `repro.core.engine` (DESIGN.md §2) — this module only reshapes
+and bitpacks the padded tensors into the kernels' layouts:
 
-- n is padded to the block multiple; padded variables are *unconstrained with
-  full domains*, so they never change, never violate, and never trip the
-  wipeout check. Padded values (d-axis) are absent from every domain and
-  allowed by no constraint. The closure over the original slice is unchanged.
 - revise_fn factories are ``lru_cache``-d on (shapes, blocks) so the returned
   function object is stable and keys `enforce_generic`'s jit cache correctly.
+- network preparation (padding + transpose + bitpack of the O(n²d²) constraint
+  tensor) is memoized per CSP identity, so repeated enforcement against the
+  same network — e.g. MAC search via the deprecated ``enforce_*_kernel``
+  entry points — pays it once. The Engine layer (`repro.engines.pallas`) calls
+  ``prepare_dense``/``prepare_packed`` once per CSP by construction.
 
 On this CPU container the kernels run in ``interpret=True`` (Pallas executes
 the kernel body in Python); on a real TPU pass ``interpret=False``.
@@ -17,41 +20,41 @@ the kernel body in Python); on a real TPU pass ``interpret=False``.
 from __future__ import annotations
 
 import functools
+import weakref
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.csp import CSP
+from repro.core.engine import pad_changed, pad_dom, pad_network
 from repro.core.rtac import EnforceResult, enforce_generic
 from . import bitpack_support, ref, rtac_support
 
 Array = jax.Array
 
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _pad_csp(csp: CSP, n_block: int, d_mult: int):
-    """Returns (cons, mask, dom, n_p, d_p) padded as described above."""
-    n, d = csp.dom.shape
-    n_p = _round_up(max(n, n_block), n_block)
-    d_p = _round_up(d, d_mult)
-    cons = jnp.pad(
-        csp.cons, ((0, n_p - n), (0, n_p - n), (0, d_p - d), (0, d_p - d))
-    )
-    mask = jnp.pad(csp.mask, ((0, n_p - n), (0, n_p - n)))
-    dom = jnp.pad(csp.dom, ((0, 0), (0, d_p - d)))
-    pad_rows = jnp.zeros((n_p - n, d_p), jnp.bool_).at[:, 0].set(True)
-    dom = jnp.concatenate([dom, pad_rows], axis=0)
-    return cons, mask, dom, n_p, d_p
+# (kind, blocks, id(cons), id(mask)) -> (wref(cons), wref(mask), (network, dims)).
+# Keyed by the identity of BOTH network tensors — the prepared form embeds the
+# mask, so a CSP sharing `cons` but carrying a different `mask` must miss. The
+# weakrefs guard against id() reuse after gc, and their callbacks evict the
+# entry when either tensor is collected.
+_NETWORK_CACHE: dict = {}
 
 
-def _pad_changed(changed0: Optional[Array], n: int, n_p: int) -> Array:
-    if changed0 is None:
-        changed0 = jnp.ones((n,), jnp.bool_)
-    return jnp.pad(changed0, (0, n_p - n))
+def _cached(kind: str, csp: CSP, block_rx: int, block_ry: int, build):
+    key = (kind, block_rx, block_ry, id(csp.cons), id(csp.mask))
+    hit = _NETWORK_CACHE.get(key)
+    if hit is not None and hit[0]() is csp.cons and hit[1]() is csp.mask:
+        return hit[2]
+    value = build()
+    evict = lambda _ref: _NETWORK_CACHE.pop(key, None)
+    try:
+        rc = weakref.ref(csp.cons, evict)
+        rm = weakref.ref(csp.mask, evict)
+    except TypeError:  # non-weakrefable leaf; just skip caching
+        return value
+    _NETWORK_CACHE[key] = (rc, rm, value)
+    return value
 
 
 # ---------------------------------------------------------------------------
@@ -79,14 +82,21 @@ def _dense_revise_fn(n_p: int, d_p: int, block_rx: int, block_ry: int, interpret
 
 
 def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
-    """-> (network, dom_padded, (n_p, d_p)). network = (cons2 u8, mask u8)."""
-    cons, mask, dom_p, n_p, d_p = _pad_csp(csp, max(block_rx, block_ry), 8)
-    cons2 = (
-        jnp.transpose(cons, (0, 2, 1, 3))
-        .reshape(n_p * d_p, n_p * d_p)
-        .astype(jnp.uint8)
-    )
-    return (cons2, mask.astype(jnp.uint8)), dom_p, (n_p, d_p)
+    """-> (network, dom_padded, (n_p, d_p)). network = (cons2 u8, mask u8).
+
+    The network half is memoized per CSP; the domain is padded fresh (O(n·d))."""
+
+    def build():
+        cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), 8)
+        cons2 = (
+            jnp.transpose(cons, (0, 2, 1, 3))
+            .reshape(n_p * d_p, n_p * d_p)
+            .astype(jnp.uint8)
+        )
+        return (cons2, mask.astype(jnp.uint8)), (n_p, d_p)
+
+    network, (n_p, d_p) = _cached("dense", csp, block_rx, block_ry, build)
+    return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p)
 
 
 def enforce_dense_kernel(
@@ -96,11 +106,16 @@ def enforce_dense_kernel(
     block_ry: int = 8,
     interpret: bool = True,
 ) -> EnforceResult:
-    """End-to-end RTAC with the dense Pallas revise."""
+    """End-to-end RTAC with the dense Pallas revise.
+
+    .. deprecated:: prefer ``repro.engines.get_engine("pallas_dense")`` —
+       prepare once, enforce many. This shim stays correct (and caches the
+       prepared network) for one release.
+    """
     network, dom_p, (n_p, d_p) = prepare_dense(csp, block_rx, block_ry)
     n, d = csp.dom.shape
     revise_fn = _dense_revise_fn(n_p, d_p, block_rx, block_ry, interpret)
-    res = enforce_generic(network, dom_p, _pad_changed(changed0, n, n_p), revise_fn=revise_fn)
+    res = enforce_generic(network, dom_p, pad_changed(changed0, n, n_p), revise_fn=revise_fn)
     return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)
 
 
@@ -140,9 +155,15 @@ def _packed_revise_fn(
 
 
 def prepare_packed(csp: CSP, block_rx: int = 8, block_ry: int = 8):
-    cons, mask, dom_p, n_p, d_p = _pad_csp(csp, max(block_rx, block_ry), 8)
-    cons_p2, w = pack_network(cons, n_p, d_p)
-    return (cons_p2, mask.astype(jnp.uint8)), dom_p, (n_p, d_p, w)
+    """-> (network, dom_padded, (n_p, d_p, w)); network memoized per CSP."""
+
+    def build():
+        cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), 8)
+        cons_p2, w = pack_network(cons, n_p, d_p)
+        return (cons_p2, mask.astype(jnp.uint8)), (n_p, d_p, w)
+
+    network, (n_p, d_p, w) = _cached("packed", csp, block_rx, block_ry, build)
+    return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p, w)
 
 
 def enforce_packed_kernel(
@@ -152,9 +173,12 @@ def enforce_packed_kernel(
     block_ry: int = 8,
     interpret: bool = True,
 ) -> EnforceResult:
-    """End-to-end RTAC with the bitpacked Pallas revise (8× less cons traffic)."""
+    """End-to-end RTAC with the bitpacked Pallas revise (8× less cons traffic).
+
+    .. deprecated:: prefer ``repro.engines.get_engine("pallas_packed")``.
+    """
     network, dom_p, (n_p, d_p, w) = prepare_packed(csp, block_rx, block_ry)
     n, d = csp.dom.shape
     revise_fn = _packed_revise_fn(n_p, d_p, w, block_rx, block_ry, interpret)
-    res = enforce_generic(network, dom_p, _pad_changed(changed0, n, n_p), revise_fn=revise_fn)
+    res = enforce_generic(network, dom_p, pad_changed(changed0, n, n_p), revise_fn=revise_fn)
     return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)

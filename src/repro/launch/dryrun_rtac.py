@@ -30,7 +30,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.core.sharded import make_sharded_enforcer
+from repro.engines import ShardedEngine
 from repro.launch.dryrun import _cost_dict, _mem_dict
 from repro.launch.mesh import make_production_mesh
 from repro.parallel.hlo_stats import collective_stats, total_wire_bytes
@@ -47,7 +47,10 @@ def run_variant(variant: str, mesh_kind: str) -> dict:
     batch_axes = ("pod", "data") if mesh_kind == "multi" else ("data",)
     impl = "bitpacked" if variant == "bitpacked" else "einsum"
     dtype = {"einsum-bf16": jnp.bfloat16, "einsum-u8": jnp.uint8}.get(variant, jnp.bfloat16)
-    enf = make_sharded_enforcer(mesh, batch_axes=batch_axes, dtype=dtype, impl=impl)
+    # the engine's AOT hook: the same jitted fn its prepare() would bind,
+    # lowered here on ShapeDtypeStructs (no 16 GiB allocation)
+    eng = ShardedEngine(mesh=mesh, batch_axes=batch_axes, dtype=dtype, impl=impl)
+    enf = eng.build_enforcer()
 
     w = DOM // 32
     if variant == "bitpacked":

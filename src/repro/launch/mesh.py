@@ -9,18 +9,28 @@ traffic (TP stays intra-pod — inter-pod links are the slow tier, DESIGN.md §5
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+# ``AxisType`` only exists in newer jax releases; feature-detect so this module
+# imports (and plain Meshes work) on the installed version.
+try:  # pragma: no cover - depends on installed jax
+    from jax.sharding import AxisType
+
+    _AXIS_KW = lambda n: {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # older jax: no explicit axis types
+    AxisType = None
+    _AXIS_KW = lambda n: {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_AXIS_KW(len(axes)))
 
 
 def make_mesh(shape, axes) -> Mesh:
     """Arbitrary mesh (tests / examples / elasticity)."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_AXIS_KW(len(axes)))
 
 
 def host_device_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:

@@ -1,0 +1,68 @@
+"""Shared test config.
+
+The property tests use ``hypothesis`` when available; this container doesn't
+ship it, so we install a minimal deterministic stand-in into ``sys.modules``
+before collection. It supports exactly the surface the suite uses —
+``given``/``settings`` and the ``integers``/``floats``/``tuples`` strategies —
+drawing ``max_examples`` pseudo-random examples from an RNG seeded by the test
+name (stable across runs; no shrinking, no database).
+"""
+
+from __future__ import annotations
+
+import sys
+
+try:  # pragma: no cover - prefer the real library when present
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import types
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda r: r.uniform(lo, hi))
+
+    def _tuples(*ss):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in ss))
+
+    def _settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = _integers
+    st_mod.floats = _floats
+    st_mod.tuples = _tuples
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = _given
+    hyp_mod.settings = _settings
+    hyp_mod.strategies = st_mod
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

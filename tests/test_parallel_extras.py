@@ -251,7 +251,7 @@ def test_sudoku_solved_by_propagation():
     from repro.core import mac_solve, sudoku_csp
 
     csp = sudoku_csp(PUZZLE)
-    sol, stats = mac_solve(csp, engine="rtac", batched_children=True)
+    sol, stats = mac_solve(csp, engine="einsum")
     assert sol is not None
     grid = np.asarray(sol).reshape(9, 9) + 1
     assert (np.sort(grid, axis=1) == np.arange(1, 10)[None, :]).all()

@@ -14,7 +14,7 @@ from repro.core import (
 )
 
 
-@pytest.mark.parametrize("engine", ["rtac", "rtac_full", "ac3"])
+@pytest.mark.parametrize("engine", ["einsum", "full", "ac3"])
 def test_nqueens(engine):
     csp = nqueens_csp(8)
     sol, stats = mac_solve(csp, engine=engine)
@@ -22,15 +22,23 @@ def test_nqueens(engine):
     assert stats.n_assignments > 0
 
 
-def test_nqueens_batched_children():
+def test_nqueens_unbatched_children():
     csp = nqueens_csp(8)
-    sol, _ = mac_solve(csp, engine="rtac", batched_children=True)
+    sol, _ = mac_solve(csp, engine="einsum", batched_children=False)
     assert sol is not None and check_solution(csp, sol)
+
+
+def test_legacy_engine_names_warn_and_work():
+    csp = nqueens_csp(6)
+    for legacy in ("rtac", "rtac_full"):
+        with pytest.warns(DeprecationWarning):
+            sol, _ = mac_solve(csp, engine=legacy)
+        assert sol is not None and check_solution(csp, sol)
 
 
 def test_nqueens_unsat():
     csp = nqueens_csp(3)  # 3-queens has no solution
-    for engine in ("rtac", "ac3"):
+    for engine in ("einsum", "ac3"):
         sol, _ = mac_solve(csp, engine=engine)
         assert sol is None
 
@@ -40,7 +48,7 @@ def test_random_csp_against_brute(seed):
     csp = random_csp(7, 4, density=0.7, tightness=0.5, seed=seed)
     cons, mask, dom = map(np.asarray, (csp.cons, csp.mask, csp.dom))
     brute = solve_brute(cons, mask, dom)
-    sol, _ = mac_solve(csp, engine="rtac")
+    sol, _ = mac_solve(csp, engine="einsum")
     sol3, _ = mac_solve(csp, engine="ac3")
     assert (sol is None) == (brute is None) == (sol3 is None)
     if sol is not None:
@@ -62,13 +70,29 @@ def test_coloring():
 def test_rtac_and_ac3_agree_on_assignment_counts():
     """Same heuristic + same propagation strength => identical search trees."""
     csp = nqueens_csp(7)
-    _, st_r = mac_solve(csp, engine="rtac")
+    _, st_r = mac_solve(csp, engine="einsum")
     _, st_a = mac_solve(csp, engine="ac3")
     assert st_r.n_assignments == st_a.n_assignments
     assert st_r.n_backtracks == st_a.n_backtracks
 
 
+def test_stats_units_are_separated():
+    """Table-1 honesty: tensor engines fill `recurrences`, AC3 fills
+    `revisions` — never the other list."""
+    csp = nqueens_csp(7)
+    _, st_r = mac_solve(csp, engine="einsum")
+    assert st_r.recurrences and not st_r.revisions
+    assert st_r.mean_recurrences > 0 and st_r.mean_revisions == 0.0
+    _, st_a = mac_solve(csp, engine="ac3")
+    assert st_a.revisions and not st_a.recurrences
+    assert st_a.mean_revisions > 0 and st_a.mean_recurrences == 0.0
+    # AC3 is sequential (supports_batch=False): children are enforced lazily,
+    # so there is exactly one enforcement per visited assignment + the root —
+    # the paper's per-assignment #Revision semantics.
+    assert len(st_a.revisions) == st_a.n_assignments + 1
+
+
 def test_budget_cap():
     csp = nqueens_csp(10)
-    sol, stats = mac_solve(csp, engine="rtac", max_assignments=3)
+    sol, stats = mac_solve(csp, engine="einsum", max_assignments=3)
     assert stats.n_assignments <= 4

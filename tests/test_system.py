@@ -18,7 +18,7 @@ def test_paper_pipeline_end_to_end():
     csp = random_csp(n_vars=30, dom_size=8, density=0.4, tightness=0.25, seed=0)
     res = enforce(csp.cons, csp.mask, csp.dom)
     assert bool(res.consistent)
-    sol, stats = mac_solve(csp, engine="rtac", batched_children=True)
+    sol, stats = mac_solve(csp, engine="einsum")
     assert sol is not None and check_solution(csp, sol)
     assert stats.mean_recurrences < 8
 
@@ -32,7 +32,7 @@ def test_recurrences_much_smaller_than_revisions():
     for dens in (0.25, 0.75):
         row = run_cell(CSPBenchSpec(n_vars=100, density=dens), n_assignments=5)
         assert not row.get("inconsistent_root")
-        recs.append(row["rtac_recurrences"])
+        recs.append(row["einsum_recurrences"])
         revs.append(row["ac3_revisions"])
     assert all(k <= 6 for k in recs), recs
     assert all(r > 10 * k for r, k in zip(revs, recs)), (revs, recs)
