@@ -1,9 +1,12 @@
-"""Per-engine enforce latency on a fixed grid slice -> BENCH_engines.json.
+"""Per-engine enforce latency on the workload suite -> BENCH_engines.json.
 
 The perf-trajectory tracker: every registered engine enforces the same sampled
-assignments against its prepared-once network on 3 cells of the paper's §5.2
-grid; median per-enforcement latency (and prepare time) land in
-``BENCH_engines.json`` at the repo root so successive PRs can diff them.
+assignments against its prepared-once network on a 3-family × 3-size slice of
+the `repro.problems` registry (Model RB at the phase transition, random graph
+coloring, n-queens); median per-enforcement latency (and prepare time) land in
+``BENCH_engines.json`` at the repo root so successive PRs can diff them —
+CI's bench-smoke job fails on a >3× regression of any cell
+(`benchmarks/check_regression.py`).
 
     PYTHONPATH=src python -m benchmarks.run --only engines
 """
@@ -18,22 +21,37 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.core import CSPBenchSpec, assign_np
+from repro.core import assign_np
 from repro.engines import available_engines, get_engine
+from repro.problems import generate
 
 OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
 
-# 3 cells: sparse / medium / dense. n kept CI-sized — the tracked quantity is
-# the *relative* per-engine trajectory across PRs, not paper-scale absolutes.
+SCHEMA = "bench_engines/v2"
+
+# 3 families × 3 sizes, CI-sized — the tracked quantity is the *relative*
+# per-engine trajectory across PRs, not paper-scale absolutes.
 CELLS = [
-    CSPBenchSpec(n_vars=60, density=0.10),
-    CSPBenchSpec(n_vars=60, density=0.50),
-    CSPBenchSpec(n_vars=60, density=1.00),
+    ("model_rb", {"n": 16, "hardness": 0.9}),
+    ("model_rb", {"n": 24, "hardness": 0.9}),
+    ("model_rb", {"n": 32, "hardness": 0.9}),
+    ("coloring_random", {"n": 30, "edge_prob": 0.15, "k": 4}),
+    ("coloring_random", {"n": 45, "edge_prob": 0.15, "k": 4}),
+    ("coloring_random", {"n": 60, "edge_prob": 0.15, "k": 4}),
+    ("nqueens", {"n": 8}),
+    ("nqueens", {"n": 12}),
+    ("nqueens", {"n": 16}),
 ]
 
 
-def bench_cell(engine_name: str, spec: CSPBenchSpec, n_assignments: int = 8, seed: int = 0) -> dict:
-    csp = spec.build()
+def cell_label(family: str, knobs: dict) -> str:
+    # ';' between knobs: labels land in comma-separated print rows
+    return f"{family}/" + ";".join(f"{k}={v}" for k, v in sorted(knobs.items()))
+
+
+def bench_cell(engine_name: str, family: str, knobs: dict, n_assignments: int = 8,
+               seed: int = 0) -> dict:
+    csp = generate(family, seed=seed, **knobs)
     n, _ = csp.dom.shape
     rng = np.random.default_rng(seed)
     eng = get_engine(engine_name)
@@ -43,8 +61,14 @@ def bench_cell(engine_name: str, spec: CSPBenchSpec, n_assignments: int = 8, see
     root = prepared.enforce()
     jax.block_until_ready(root.dom)  # include first-compile in prepare_ms
     prepare_ms = 1e3 * (time.perf_counter() - t0)
+    out = {
+        "family": family,
+        "label": cell_label(family, knobs),
+        "n_vars": n,
+        "dom_size": csp.dom_size,
+    }
     if not bool(root.consistent):
-        return {"n_vars": spec.n_vars, "density": spec.density, "inconsistent_root": True}
+        return {**out, "inconsistent_root": True}
     root_np = np.asarray(root.dom)
 
     sites = []
@@ -63,8 +87,7 @@ def bench_cell(engine_name: str, spec: CSPBenchSpec, n_assignments: int = 8, see
         jax.block_until_ready(r.dom)  # no D2H copy inside the timed region
         lat.append(1e3 * (time.perf_counter() - t0))
     return {
-        "n_vars": spec.n_vars,
-        "density": spec.density,
+        **out,
         "prepare_ms": round(prepare_ms, 3),
         "enforce_ms_median": round(float(np.median(lat)), 3),
         "enforce_ms_mean": round(float(np.mean(lat)), 3),
@@ -74,19 +97,22 @@ def bench_cell(engine_name: str, spec: CSPBenchSpec, n_assignments: int = 8, see
 
 def main(engines=None, out_path: Path = OUT_PATH) -> dict:
     engines = list(engines) if engines else available_engines()
-    report = {
-        "schema": "bench_engines/v1",
-        "platform": platform.platform(),
-        "engines": {},
-    }
+    report = {"schema": SCHEMA, "platform": platform.platform(), "engines": {}}
+    if out_path.exists():  # keep sections other benchmarks own (e.g. "many")
+        try:
+            prior = json.loads(out_path.read_text())
+            if prior.get("schema") == SCHEMA and "many" in prior:
+                report["many"] = prior["many"]
+        except (json.JSONDecodeError, OSError):
+            pass
     for name in engines:
-        cells = [bench_cell(name, spec) for spec in CELLS]
+        cells = [bench_cell(name, family, knobs) for family, knobs in CELLS]
         report["engines"][name] = cells
         for c in cells:
             if c.get("inconsistent_root"):
                 continue
             print(
-                f"engines,{name},{c['n_vars']},{c['density']:.2f},"
+                f"engines,{name},{c['label']},"
                 f"{c['prepare_ms']:.3f},{c['enforce_ms_median']:.3f}"
             )
     out_path.write_text(json.dumps(report, indent=1))

@@ -1,0 +1,82 @@
+"""Workload throughput: instances/second of `solve_many` vs sequential
+`mac_solve` -> the "many" section of BENCH_engines.json.
+
+The multi-instance amortization story (DESIGN.md §6) in one number: B
+independent Model-RB / coloring instances solved to completion, once as B
+sequential `mac_solve` calls and once as a single lockstep `solve_many`
+portfolio whose every round is one `enforce_many` dispatch. Results are
+verified identical before timings are reported.
+
+    PYTHONPATH=src python -m benchmarks.run --only many
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import mac_solve, solve_many
+from repro.problems import generate_batch
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
+
+WORKLOADS = [
+    ("model_rb", {"n": 12, "hardness": 1.0}, 32),
+    ("coloring_random", {"n": 16, "edge_prob": 0.25, "k": 3}, 32),
+]
+
+
+def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
+                   seed: int = 0) -> dict:
+    csps = generate_batch(family, count, seed=seed, **knobs)
+
+    t0 = time.perf_counter()
+    seq = [mac_solve(c, engine=engine)[0] for c in csps]
+    seq_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sols, _ = solve_many(csps, engine=engine)
+    many_s = time.perf_counter() - t0
+
+    if sols != seq:  # throughput numbers are meaningless if results diverge
+        raise AssertionError(f"{family}: solve_many diverged from sequential mac_solve")
+
+    return {
+        "family": family,
+        "knobs": knobs,
+        "count": count,
+        "engine": engine,
+        "n_solved": sum(s is not None for s in sols),
+        "sequential_s": round(seq_s, 3),
+        "solve_many_s": round(many_s, 3),
+        "sequential_instances_per_s": round(count / seq_s, 3),
+        "many_instances_per_s": round(count / many_s, 3),
+        "speedup": round(seq_s / many_s, 3),
+    }
+
+
+def main(engine: str = "einsum", out_path: Path = OUT_PATH) -> list:
+    rows = [bench_workload(f, knobs, count, engine=engine) for f, knobs, count in WORKLOADS]
+    for r in rows:
+        print(
+            f"many,{r['engine']},{r['family']},{r['count']},"
+            f"{r['sequential_instances_per_s']:.3f},{r['many_instances_per_s']:.3f},"
+            f"{r['speedup']:.3f}"
+        )
+    report = {"schema": "bench_engines/v2", "engines": {}}
+    if out_path.exists():  # merge into the tracker file bench_engines owns,
+        try:  # but never graft onto a stale/foreign schema
+            prior = json.loads(out_path.read_text())
+            if prior.get("schema") == report["schema"]:
+                report = prior
+        except (json.JSONDecodeError, OSError):
+            pass
+    report["many"] = rows
+    out_path.write_text(json.dumps(report, indent=1))
+    print(f"many: wrote {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

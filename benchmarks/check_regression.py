@@ -1,0 +1,80 @@
+"""Compare a fresh BENCH_engines.json against the committed baseline and fail
+on latency regressions — CI's bench-smoke gate.
+
+    python -m benchmarks.check_regression BASELINE FRESH [--tolerance 3.0]
+
+A cell regresses when ``fresh/baseline > tolerance`` on ``enforce_ms_median``.
+The default 3× tolerance absorbs shared-runner noise while still catching
+order-of-magnitude mistakes (accidental re-preparation, lost jit caching, a
+host sync in the hot path). Cells are matched by (engine, label); an engine or
+cell present in the baseline but missing from the fresh run fails the check,
+new cells are reported but pass (the baseline is regenerated in the same PR
+that adds them). Exit code 0 = ok, 1 = regression/mismatch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+METRIC = "enforce_ms_median"
+
+
+def index_cells(report: dict) -> dict:
+    out = {}
+    for engine, cells in report.get("engines", {}).items():
+        for cell in cells:
+            if cell.get("inconsistent_root"):
+                continue
+            out[(engine, cell["label"])] = cell
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Returns a list of failure strings (empty = pass); prints a cell table."""
+    failures = []
+    if baseline.get("schema") != fresh.get("schema"):
+        return [
+            f"schema mismatch: baseline {baseline.get('schema')!r} vs fresh "
+            f"{fresh.get('schema')!r} — regenerate the committed BENCH_engines.json"
+        ]
+    base_cells, fresh_cells = index_cells(baseline), index_cells(fresh)
+    for key in sorted(base_cells):
+        engine, label = key
+        if key not in fresh_cells:
+            failures.append(f"{engine} {label}: cell missing from fresh run")
+            continue
+        b, f = base_cells[key][METRIC], fresh_cells[key][METRIC]
+        # one rounding quantum (bench_engines rounds to 3 decimals) as a floor,
+        # so a 0.000 baseline doesn't turn every later run into inf/FAIL
+        eps = 1e-3
+        ratio = (f + eps) / (b + eps)
+        status = "FAIL" if ratio > tolerance else "ok"
+        print(f"{status:4s} {engine:14s} {label:34s} {b:10.3f} -> {f:10.3f} ms ({ratio:.2f}x)")
+        if ratio > tolerance:
+            failures.append(f"{engine} {label}: {METRIC} {b} -> {f} ({ratio:.2f}x > {tolerance}x)")
+    for key in sorted(set(fresh_cells) - set(base_cells)):
+        print(f"new  {key[0]:14s} {key[1]:34s} (no baseline — passes)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("fresh", type=Path)
+    ap.add_argument("--tolerance", type=float, default=3.0)
+    args = ap.parse_args(argv)
+    baseline = json.loads(args.baseline.read_text())
+    fresh = json.loads(args.fresh.read_text())
+    failures = compare(baseline, fresh, args.tolerance)
+    for f in failures:
+        print(f"regression: {f}", file=sys.stderr)
+    print(f"check_regression: {'FAIL' if failures else 'PASS'} "
+          f"({len(failures)} failure(s), tolerance {args.tolerance}x)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -148,6 +148,10 @@ def to_markdown(rows: List[dict]) -> str:
 
 
 def main():
+    if not ART_DIR.is_dir() or not any(ART_DIR.glob("*.json")):
+        print(f"roofline: no dry-run artifacts under {ART_DIR}")
+        print("roofline: run `python -m repro.launch.dryrun --all` first, then re-run")
+        return []
     rows = load_all()
     print("roofline: arch,shape,mesh,compute_s,memory_s,collective_s,dominant,frac,useful")
     for r in rows:

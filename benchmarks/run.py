@@ -5,8 +5,10 @@ Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
 
   table1   paper Table 1 — #Revision (AC3) vs #Recurrence (RTAC) per assignment
   fig3     paper Fig. 3 — per-assignment enforcement time (+ batched variant)
-  engines  per-engine enforce latency on 3 grid cells -> BENCH_engines.json
-           (the cross-PR perf trajectory)
+  engines  per-engine enforce latency on 3 problem families × 3 sizes ->
+           BENCH_engines.json (the cross-PR perf trajectory)
+  many     instances/second of solve_many vs sequential mac_solve ->
+           BENCH_engines.json "many" section
   roofline deliverable (g) — three-term roofline per dry-run artifact (reads
            artifacts/dryrun; run `python -m repro.launch.dryrun --all` first)
 """
@@ -21,7 +23,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale grid")
     ap.add_argument(
-        "--only", choices=["table1", "fig3", "engines", "roofline"], default=None
+        "--only",
+        choices=["table1", "fig3", "engines", "many", "roofline"],
+        default=None,
     )
     args = ap.parse_args()
     quick = not args.full
@@ -38,13 +42,17 @@ def main() -> None:
         from . import bench_engines
 
         bench_engines.main()
+    if args.only in (None, "many"):
+        from . import bench_many
+
+        bench_many.main()
     if args.only in (None, "roofline"):
         from . import roofline
 
         try:
             roofline.main()
-        except Exception as e:  # artifacts not generated yet
-            print(f"roofline,skipped,{e}", file=sys.stderr)
+        except Exception as e:  # unexpected failure; missing artifacts are
+            print(f"roofline,skipped,{e}", file=sys.stderr)  # handled inside
 
 
 if __name__ == "__main__":

@@ -9,8 +9,9 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import check_solution, mac_solve, random_csp
+from repro.core import check_solution, mac_solve, random_csp, solve_many
 from repro.engines import get_engine
+from repro.problems import generate_batch
 
 
 def main():
@@ -37,6 +38,17 @@ def main():
         print(f"solution found: {sol[:10]}... "
               f"({stats.n_assignments} assignments, "
               f"mean {stats.mean_recurrences:.2f} recurrences/enforcement)")
+
+    # 3. generate a whole workload (repro.problems registry) and solve all
+    #    instances as ONE lockstep portfolio — every round is a single
+    #    enforce_many dispatch against the stacked prepared networks, and
+    #    each result is identical to solving that instance alone
+    csps = generate_batch("model_rb", 16, n=16, hardness=1.0, seed=7)
+    sols, many_stats = solve_many(csps, engine="einsum")
+    solved = sum(s is not None for s in sols)
+    print(f"workload: {solved}/{len(csps)} Model-RB instances satisfiable "
+          f"at the phase transition, "
+          f"{sum(st.n_assignments for st in many_stats)} assignments total")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
 """Sudoku via RTAC-driven MAC search — propagation does almost all the work.
 
-    PYTHONPATH=src python examples/sudoku.py
+    PYTHONPATH=src python examples/sudoku.py                # the classic puzzle
+    PYTHONPATH=src python examples/sudoku.py GIVENS [SEED]  # a generated one,
+                                                 # via the repro.problems registry
+
+Fewer givens = harder (the generator's difficulty knob).
 """
 
 import sys
@@ -10,6 +14,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core import mac_solve, sudoku_csp
+from repro.problems import generate
 
 PUZZLE = np.array(
     [
@@ -26,8 +31,12 @@ PUZZLE = np.array(
 )
 
 
-def main():
-    csp = sudoku_csp(PUZZLE)
+def main(givens=None, seed=0):
+    if givens is None:
+        csp = sudoku_csp(PUZZLE)
+    else:
+        csp = generate("sudoku", givens=givens, seed=seed)
+        print(f"generated puzzle: givens={givens} seed={seed}")
     sol, stats = mac_solve(csp, engine="einsum")
     assert sol is not None, "puzzle should be solvable"
     grid = np.asarray(sol).reshape(9, 9) + 1
@@ -43,4 +52,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(
+        int(sys.argv[1]) if len(sys.argv) > 1 else None,
+        int(sys.argv[2]) if len(sys.argv) > 2 else 0,
+    )

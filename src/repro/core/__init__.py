@@ -24,8 +24,8 @@ from .rtac import (
 )
 from .ac3 import AC3Result, build_neighbours, enforce_ac3, assign_np
 from .brute import ac_closure_brute, count_solutions, solve_brute
-from .engine import Engine, PreparedNetwork
-from .search import SearchStats, check_solution, mac_solve, resolve_engine
+from .engine import Engine, PreparedMany, PreparedNetwork
+from .search import SearchStats, check_solution, mac_solve, resolve_engine, solve_many
 
 __all__ = [
     "CSP",
@@ -54,9 +54,11 @@ __all__ = [
     "count_solutions",
     "solve_brute",
     "Engine",
+    "PreparedMany",
     "PreparedNetwork",
     "SearchStats",
     "check_solution",
     "mac_solve",
     "resolve_engine",
+    "solve_many",
 ]

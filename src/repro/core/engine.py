@@ -6,6 +6,9 @@ kernels, sharded, AC3) satisfies one small contract:
     engine.prepare(csp)            -> PreparedNetwork       (expensive, once)
     prepared.enforce(dom, ch)      -> EnforceResult         (hot path)
     prepared.enforce_batch(doms, ch) -> EnforceResult       (B domains at once)
+    engine.prepare_many(csps)      -> PreparedMany          (stacked workload)
+    many.enforce_many(doms, ch, idx) -> EnforceResult       (R domains, each
+                                                             vs its OWN network)
 
 ``prepare`` does everything that depends only on the *constraint network*:
 padding the O(n²d²) constraint tensor to kernel tiles, bitpacking, reshaping,
@@ -30,7 +33,7 @@ This module is the only place that implements that contract.
 from __future__ import annotations
 
 import abc
-from typing import Any, ClassVar, Optional, Union
+from typing import Any, ClassVar, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -137,6 +140,63 @@ class PreparedNetwork:
         return self.engine.enforce_batch(self, doms, changed0)
 
 
+class PreparedMany:
+    """B constraint networks sharing (n, d), compiled into one backend's
+    *stacked* resident form (DESIGN.md §6).
+
+    Where `PreparedNetwork` amortizes preparation across the many enforcements
+    of ONE search, `PreparedMany` amortizes the device across MANY independent
+    instances: ``enforce_many`` resolves R domains, each against its own
+    network, in one dispatch on backends that support it. ``payload`` is
+    backend-owned — stacked tensors for the vmapped engines, a plain list of
+    per-instance `PreparedNetwork`s for the generic fallback.
+    """
+
+    __slots__ = ("engine", "csps", "payload")
+
+    def __init__(self, engine: "Engine", csps: Sequence[CSP], payload: Any):
+        self.engine = engine
+        self.csps = list(csps)
+        self.payload = payload
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.csps)
+
+    @property
+    def n_vars(self) -> int:
+        return self.csps[0].dom.shape[0]
+
+    @property
+    def dom_size(self) -> int:
+        return self.csps[0].dom.shape[1]
+
+    def enforce_many(
+        self, doms, changed0: Changed = None, instance_idx=None
+    ) -> EnforceResult:
+        """Enforce AC on R domains (R, n, d), row i against the network of
+        instance ``instance_idx[i]`` (default: ``arange(B)``, requiring R == B).
+        Result fields carry the leading R axis."""
+        return self.engine.enforce_many(self, doms, changed0, instance_idx)
+
+
+def resolve_instance_idx(instance_idx, n_instances: int, n_rows: int) -> np.ndarray:
+    """Normalize/validate the row→instance map of ``enforce_many``."""
+    if instance_idx is None:
+        if n_rows != n_instances:
+            raise ValueError(
+                f"enforce_many got {n_rows} domains for {n_instances} instances; "
+                "pass instance_idx to map rows to instances"
+            )
+        return np.arange(n_instances, dtype=np.int32)
+    idx = np.asarray(instance_idx, dtype=np.int32)
+    if idx.shape != (n_rows,):
+        raise ValueError(f"instance_idx shape {idx.shape} != ({n_rows},)")
+    if idx.size and (idx.min() < 0 or idx.max() >= n_instances):
+        raise ValueError(f"instance_idx out of range [0, {n_instances})")
+    return idx
+
+
 class Engine(abc.ABC):
     """One enforcement backend. Register concrete engines in `repro.engines`."""
 
@@ -151,6 +211,11 @@ class Engine(abc.ABC):
     #: lazily one at a time — eager batching would do strictly more work there
     #: and skew the per-assignment statistics.
     supports_batch: ClassVar[bool] = True
+    #: whether ``enforce_many`` is one stacked device dispatch (jit-shaped on
+    #: the row count, so callers benefit from padding rounds to reused shapes).
+    #: False = the generic host-routing fallback, where padded rows would be
+    #: real enforcement work thrown away.
+    stacked_many: ClassVar[bool] = False
 
     def prepare(self, csp: CSP) -> PreparedNetwork:
         """Compile the constraint network into this backend's resident form.
@@ -171,6 +236,47 @@ class Engine(abc.ABC):
         results = [
             self.enforce(prepared, doms[i], None if changed0 is None else changed0[i])
             for i in range(len(doms))
+        ]
+        return EnforceResult(
+            dom=np.stack([np.asarray(r.dom) for r in results]),
+            consistent=np.asarray([bool(r.consistent) for r in results]),
+            n_recurrences=np.asarray([int(r.n_recurrences) for r in results]),
+        )
+
+    # --- multi-instance (one workload, many independent CSPs) ---------------
+
+    def prepare_many(self, csps: Sequence[CSP]) -> PreparedMany:
+        """Compile B constraint networks sharing (n, d) into one stacked
+        resident form. Everything O(B·n²d²) happens here, once per workload."""
+        csps = list(csps)
+        if not csps:
+            raise ValueError("prepare_many needs at least one CSP")
+        n, d = csps[0].dom.shape
+        for i, c in enumerate(csps):
+            if tuple(c.dom.shape) != (n, d):
+                raise ValueError(
+                    f"prepare_many: instance {i} has shape {tuple(c.dom.shape)}, "
+                    f"expected ({n}, {d}) — all instances must share (n_vars, dom_size)"
+                )
+        return PreparedMany(self, csps, self._prepare_many_payload(csps))
+
+    def _prepare_many_payload(self, csps: List[CSP]) -> Any:
+        """Generic fallback: per-instance `PreparedNetwork`s. Vmappable
+        backends override this with genuinely stacked network tensors."""
+        return [self.prepare(c) for c in csps]
+
+    def enforce_many(
+        self, prepared: PreparedMany, doms, changed0: Changed = None, instance_idx=None
+    ) -> EnforceResult:
+        """Generic fallback: route each row to its instance's prepared network
+        on the host. Vmappable backends override this with ONE device dispatch
+        over the stacked networks."""
+        doms = np.asarray(doms)
+        idx = resolve_instance_idx(instance_idx, prepared.n_instances, doms.shape[0])
+        nets: List[PreparedNetwork] = prepared.payload
+        results = [
+            self.enforce(nets[int(j)], doms[i], None if changed0 is None else changed0[i])
+            for i, j in enumerate(idx)
         ]
         return EnforceResult(
             dom=np.stack([np.asarray(r.dom) for r in results]),

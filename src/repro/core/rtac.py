@@ -220,6 +220,44 @@ def enforce_batch(
     return enforce_batch_generic((cons, mask), dom, changed0, revise_fn=revise_fn)
 
 
+# ---------------------------------------------------------------------------
+# Multi-instance enforcement — R domains, each against its OWN network.
+# ``networks`` is a pytree whose leaves carry a leading instance axis (B, ...)
+# (B stacked constraint networks sharing (n, d)); ``instance_idx ∈ [0,B)^R``
+# maps each domain row to its network. One vmapped fixpoint resolves a whole
+# workload of independent CSPs in a single device dispatch (DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("revise_fn",))
+def enforce_many_generic(
+    networks,
+    dom: Array,  # (R, n, d)
+    changed0: Optional[Array],  # (R, n) or None
+    instance_idx: Array,  # (R,) int32
+    revise_fn: ReviseFn = _EINSUM_REVISE,
+) -> EnforceResult:
+    net = jax.tree_util.tree_map(lambda a: a[instance_idx], networks)
+    fn = functools.partial(enforce_generic.__wrapped__, revise_fn=revise_fn)
+    if changed0 is None:
+        return jax.vmap(lambda nw, d: fn(nw, d))(net, dom)
+    return jax.vmap(lambda nw, d, c: fn(nw, d, c))(net, dom, changed0)
+
+
+@functools.partial(jax.jit, static_argnames=("support_fn",))
+def enforce_full_many(
+    cons: Array,  # (B, n, n, d, d)
+    mask: Array,  # (B, n, n)
+    dom: Array,  # (R, n, d)
+    instance_idx: Array,  # (R,) int32
+    support_fn: SupportFn = einsum_support,
+) -> EnforceResult:
+    fn = functools.partial(enforce_full.__wrapped__, support_fn=support_fn)
+    return jax.vmap(lambda c, m, d: fn(c, m, d))(
+        cons[instance_idx], mask[instance_idx], dom
+    )
+
+
 # CSP-level conveniences ------------------------------------------------------
 
 

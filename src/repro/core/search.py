@@ -6,17 +6,29 @@ network, recording per-assignment statistics — exactly the quantities of paper
 Table 1 (#Recurrence for the tensor engines / #Revision for AC3, averaged over
 assignments, kept in separate fields) and Fig. 3 (time per assignment).
 
-Beyond the paper: the per-child loop is *frontier-batched by default* — all
-candidate values of the branching variable are enforced in one
-``enforce_batch`` dispatch (one device round-trip per search *node* instead of
-per *child*), which the sequential paradigm cannot express. Pass
-``batched_children=False`` for the classical one-child-at-a-time schedule.
-Engines with ``supports_batch=False`` (the sequential AC3 baseline, where
-eager batching is pure extra work) always use the classical schedule.
+Beyond the paper, two batching axes (DESIGN.md §6):
 
-``engine`` accepts an `Engine` instance or a registry name
-(`repro.engines.available_engines()`); the pre-Engine strings "rtac" /
-"rtac_full" still resolve (with a DeprecationWarning) for one release.
+- **Frontier batching** (within one search): all candidate values of the
+  branching variable are enforced in one ``enforce_batch`` dispatch — one
+  device round-trip per search *node* instead of per *child*. Pass
+  ``batched_children=False`` for the classical one-child-at-a-time schedule.
+  Engines with ``supports_batch=False`` (the sequential AC3 baseline, where
+  eager batching is pure extra work) always use the classical schedule.
+- **Instance batching** (across searches): ``solve_many`` runs B independent
+  CSPs sharing (n, d) to completion. On batch-capable engines the searches
+  advance in *lockstep*: each round gathers every active search's pending
+  enforcement frontier into ONE ``enforce_many`` dispatch against the stacked
+  prepared networks (`Engine.prepare_many`), so a whole workload shares each
+  device round-trip. Every search still takes exactly the decisions it would
+  take alone — solutions and per-instance statistics are identical to
+  sequential ``mac_solve`` (only wall-clock attribution differs).
+
+The search logic itself is written once, as a coroutine that *yields*
+enforcement requests and receives results; ``mac_solve`` drives one coroutine,
+``solve_many`` multiplexes B of them. ``engine`` accepts an `Engine` instance
+or a registry name (`repro.engines.available_engines()`); the pre-Engine
+strings "rtac" / "rtac_full" still resolve (with a DeprecationWarning) for one
+release.
 """
 
 from __future__ import annotations
@@ -24,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import List, Optional, Union
+from typing import Generator, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -85,69 +97,60 @@ def resolve_engine(engine: Union[Engine, str], support_fn=None) -> Engine:
     return get_engine(engine, **opts)
 
 
-def mac_solve(
+# ---------------------------------------------------------------------------
+# The MAC search coroutine — search logic decoupled from dispatch
+# ---------------------------------------------------------------------------
+
+
+class _Request(NamedTuple):
+    """One pending enforcement: b candidate domains, all rows live."""
+
+    doms: np.ndarray  # (b, n, d) bool
+    changed: Optional[np.ndarray]  # (b, n) bool, or None = all variables
+
+
+class _Reply(NamedTuple):
+    doms: np.ndarray  # (b, n, d) bool — AC closures
+    consistent: np.ndarray  # (b,) bool
+
+
+_MacGen = Generator[_Request, _Reply, Optional[List[int]]]
+
+
+def _mac_coroutine(
     csp: CSP,
-    engine: Union[Engine, str] = "einsum",
-    support_fn=None,
-    max_assignments: Optional[int] = None,
-    batched_children: bool = True,
-    collect_stats: bool = True,
-) -> tuple[Optional[List[int]], SearchStats]:
-    """Returns (solution | None, stats). Raises nothing on budget exhaustion —
-    stops and returns (None, stats) with ``stats.n_assignments`` at the cap."""
-    eng = resolve_engine(engine, support_fn)
-    prepared = eng.prepare(csp)  # the ONLY preparation in the whole run
-    stats = SearchStats()
-    n, _ = csp.dom.shape
-    counts = stats.recurrences if eng.count_unit == "recurrences" else stats.revisions
-
-    def record(t0: float, ks) -> None:
-        if collect_stats:
-            stats.enforce_seconds.append(time.perf_counter() - t0)
-            counts.extend(int(k) for k in np.atleast_1d(ks))
-
-    def enforce_one(dom_np: np.ndarray, changed_idx: Optional[int]):
-        """-> (dom' np, consistent). One domain, one dispatch."""
-        ch = None
-        if changed_idx is not None:
-            ch = np.zeros((n,), bool)
-            ch[changed_idx] = True
-        t0 = time.perf_counter()
-        res = prepared.enforce(dom_np, ch)
-        record(t0, res.n_recurrences)
-        return np.asarray(res.dom), bool(res.consistent)
+    supports_batch: bool,
+    batched_children: bool,
+    max_assignments: Optional[int],
+    stats: SearchStats,
+) -> _MacGen:
+    """Alg. 2 as a coroutine: yields `_Request`s, receives `_Reply`s, returns
+    the solution (or None). The coroutine owns every search decision and the
+    assignment/backtrack counters; the driver owns dispatch, padding, timing
+    and work-counter recording — so one search behaves identically whether it
+    is driven alone (`mac_solve`) or multiplexed with others (`solve_many`)."""
+    dom0 = np.asarray(csp.dom)
+    n, _ = dom0.shape
 
     # Root propagation (Alg. 2 line 3).
-    dom0, ok = enforce_one(np.asarray(csp.dom), None)
-    if not ok:
-        return None, stats
+    reply = yield _Request(dom0[None], None)
+    if not bool(reply.consistent[0]):
+        return None
 
     assigned = np.zeros((n,), dtype=bool)
 
-    def dfs(dom_np: np.ndarray) -> Optional[List[int]]:
+    def dfs(dom_np: np.ndarray) -> _MacGen:
         if assigned.all():
             return [int(np.argmax(dom_np[x])) for x in range(n)]
         var = _select_var(dom_np, assigned)
         values = [int(v) for v in np.nonzero(dom_np[var])[0]]
 
-        child_results = None
-        if batched_children and eng.supports_batch and len(values) > 1:
-            b = len(values)
-            # bucket B up to a power of two (repeating the last child — the
-            # fixpoint is idempotent per element) so the jitted batched
-            # enforcement compiles O(log d) shapes instead of one per frontier
-            # size; results are sliced back to the true frontier below.
-            b_p = 1 << (b - 1).bit_length()
-            doms = np.stack(
-                [assign_np(dom_np, var, v) for v in values]
-                + [assign_np(dom_np, var, values[-1])] * (b_p - b)
-            )
-            ch = np.zeros((b_p, n), bool)
+        child_results: Optional[_Reply] = None
+        if batched_children and supports_batch and len(values) > 1:
+            doms = np.stack([assign_np(dom_np, var, v) for v in values])
+            ch = np.zeros((len(values), n), bool)
             ch[:, var] = True
-            t0 = time.perf_counter()
-            res = prepared.enforce_batch(doms, ch)
-            record(t0, np.asarray(res.n_recurrences)[:b])
-            child_results = res
+            child_results = yield _Request(doms, ch)
 
         assigned[var] = True
         try:
@@ -156,12 +159,15 @@ def mac_solve(
                 if max_assignments and stats.n_assignments > max_assignments:
                     raise BudgetExceeded
                 if child_results is not None:
+                    dom_i = child_results.doms[i]
                     ok_i = bool(child_results.consistent[i])
-                    dom_i = np.asarray(child_results.dom[i])
                 else:
-                    dom_i, ok_i = enforce_one(assign_np(dom_np, var, val), var)
+                    ch = np.zeros((1, n), bool)
+                    ch[0, var] = True
+                    r = yield _Request(assign_np(dom_np, var, val)[None], ch)
+                    dom_i, ok_i = r.doms[0], bool(r.consistent[0])
                 if ok_i:
-                    sol = dfs(dom_i)
+                    sol = yield from dfs(dom_i)
                     if sol is not None:
                         return sol
                 stats.n_backtracks += 1
@@ -169,11 +175,184 @@ def mac_solve(
         finally:
             assigned[var] = False
 
+    return (yield from dfs(reply.doms[0]))
+
+
+def _next_pow2(b: int) -> int:
+    return 1 << (b - 1).bit_length()
+
+
+def _drive_single(prepared, gen: _MacGen, counts: List[int], stats: SearchStats,
+                  collect_stats: bool) -> Optional[List[int]]:
+    """Run one coroutine against one `PreparedNetwork`. Single-row requests go
+    through ``enforce``; frontiers through ``enforce_batch``, padded up to a
+    power of two (repeating the last child — enforcement is idempotent per
+    element) so the jitted batched fixpoint compiles O(log d) shapes instead
+    of one per frontier size."""
     try:
-        sol = dfs(dom0)
+        req = gen.send(None)  # prime: runs to the first yield
+        while True:
+            b = req.doms.shape[0]
+            t0 = time.perf_counter()
+            if b == 1:
+                res = prepared.enforce(
+                    req.doms[0], None if req.changed is None else req.changed[0]
+                )
+                doms_out = np.asarray(res.dom)[None]
+                cons_out = np.atleast_1d(np.asarray(res.consistent))
+                ks = np.atleast_1d(np.asarray(res.n_recurrences))
+            else:
+                b_p = _next_pow2(b)
+                doms, ch = req.doms, req.changed
+                if b_p != b:
+                    doms = np.concatenate([doms, np.repeat(doms[-1:], b_p - b, axis=0)])
+                    ch = np.concatenate([ch, np.repeat(ch[-1:], b_p - b, axis=0)])
+                res = prepared.enforce_batch(doms, ch)
+                doms_out = np.asarray(res.dom)[:b]
+                cons_out = np.asarray(res.consistent)[:b]
+                ks = np.asarray(res.n_recurrences)[:b]
+            if collect_stats:
+                stats.enforce_seconds.append(time.perf_counter() - t0)
+                counts.extend(int(k) for k in ks)
+            req = gen.send(_Reply(doms_out, cons_out))
+    except StopIteration as stop:
+        return stop.value
+
+
+def mac_solve(
+    csp: CSP,
+    engine: Union[Engine, str] = "einsum",
+    support_fn=None,
+    max_assignments: Optional[int] = None,
+    batched_children: bool = True,
+    collect_stats: bool = True,
+) -> Tuple[Optional[List[int]], SearchStats]:
+    """Returns (solution | None, stats). Raises nothing on budget exhaustion —
+    stops and returns (None, stats) with ``stats.n_assignments`` at the cap."""
+    eng = resolve_engine(engine, support_fn)
+    prepared = eng.prepare(csp)  # the ONLY preparation in the whole run
+    stats = SearchStats()
+    counts = stats.recurrences if eng.count_unit == "recurrences" else stats.revisions
+    gen = _mac_coroutine(csp, eng.supports_batch, batched_children, max_assignments, stats)
+    try:
+        sol = _drive_single(prepared, gen, counts, stats, collect_stats)
     except BudgetExceeded:
         return None, stats
     return sol, stats
+
+
+# ---------------------------------------------------------------------------
+# solve_many — the portfolio entry point (one workload, many CSPs)
+# ---------------------------------------------------------------------------
+
+
+def solve_many(
+    csps: Sequence[CSP],
+    engine: Union[Engine, str] = "einsum",
+    support_fn=None,
+    max_assignments: Optional[int] = None,
+    batched_children: bool = True,
+    collect_stats: bool = True,
+) -> Tuple[List[Optional[List[int]]], List[SearchStats]]:
+    """Run B independent MAC searches (instances sharing (n, d)) to completion.
+
+    On batch-capable engines the searches advance in lockstep: every round
+    concatenates each active search's pending frontier into one
+    ``enforce_many`` dispatch against the `Engine.prepare_many` stacked
+    networks (the round is padded up to a power of two for jit-shape reuse).
+    ``max_assignments`` is a *per-instance* budget. Solutions and per-instance
+    search statistics are identical to sequential ``mac_solve``;
+    ``enforce_seconds`` attributes each round's wall-clock to its participants
+    proportionally to their row counts.
+
+    Sequential engines (``supports_batch=False``, i.e. AC3) degrade to one
+    ``mac_solve`` per instance — same results, no amortization.
+
+    Returns (solutions, stats) as same-length lists, index-aligned with
+    ``csps``.
+    """
+    csps = list(csps)
+    eng = resolve_engine(engine, support_fn)
+    if not csps:
+        return [], []
+
+    if not eng.supports_batch:
+        sols, stats = [], []
+        for csp in csps:
+            s, st = mac_solve(
+                csp,
+                engine=eng,
+                max_assignments=max_assignments,
+                batched_children=batched_children,
+                collect_stats=collect_stats,
+            )
+            sols.append(s)
+            stats.append(st)
+        return sols, stats
+
+    prepared = eng.prepare_many(csps)  # the ONLY preparation in the whole run
+    all_stats = [SearchStats() for _ in csps]
+    counts = [
+        st.recurrences if eng.count_unit == "recurrences" else st.revisions
+        for st in all_stats
+    ]
+    sols: List[Optional[List[int]]] = [None] * len(csps)
+    n = prepared.n_vars
+
+    gens: dict = {}
+    pending: dict = {}
+    for i, csp in enumerate(csps):
+        g = _mac_coroutine(csp, True, batched_children, max_assignments, all_stats[i])
+        pending[i] = g.send(None)  # root request; a coroutine always yields ≥ once
+        gens[i] = g
+
+    while pending:
+        order = sorted(pending)
+        sizes = [pending[i].doms.shape[0] for i in order]
+        doms = np.concatenate([pending[i].doms for i in order])
+        chs = np.concatenate(
+            [
+                pending[i].changed
+                if pending[i].changed is not None
+                else np.ones((pending[i].doms.shape[0], n), bool)
+                for i in order
+            ]
+        )
+        idx = np.repeat(np.asarray(order, np.int32), sizes)
+        r = len(idx)
+        # Pad the round up to a power of two only for stacked-dispatch engines
+        # (jit-shape reuse, as in the single-search frontier path); on the
+        # host-routing fallback padded rows would be real work thrown away.
+        r_p = _next_pow2(r) if eng.stacked_many else r
+        if r_p != r:
+            doms = np.concatenate([doms, np.repeat(doms[-1:], r_p - r, axis=0)])
+            chs = np.concatenate([chs, np.repeat(chs[-1:], r_p - r, axis=0)])
+            idx = np.concatenate([idx, np.repeat(idx[-1:], r_p - r)])
+
+        t0 = time.perf_counter()
+        res = prepared.enforce_many(doms, chs, idx)
+        doms_out = np.asarray(res.dom)
+        cons_out = np.asarray(res.consistent)
+        ks = np.asarray(res.n_recurrences)
+        dt = time.perf_counter() - t0
+
+        off = 0
+        next_pending: dict = {}
+        for i, b in zip(order, sizes):
+            rows = slice(off, off + b)
+            off += b
+            if collect_stats:
+                all_stats[i].enforce_seconds.append(dt * b / r_p)
+                counts[i].extend(int(k) for k in ks[rows])
+            try:
+                next_pending[i] = gens[i].send(_Reply(doms_out[rows], cons_out[rows]))
+            except StopIteration as stop:
+                sols[i] = stop.value
+            except BudgetExceeded:
+                sols[i] = None
+        pending = next_pending
+
+    return sols, all_stats
 
 
 def check_solution(csp: CSP, solution: List[int]) -> bool:

@@ -38,5 +38,6 @@ class AC3Engine(Engine):
         # n_recurrences carries this engine's native unit: revisions.
         return EnforceResult(res.dom, res.consistent, res.n_revisions)
 
-    # enforce_batch: the generic host-loop fallback in Engine is already the
-    # right (only) semantics for a sequential baseline.
+    # enforce_batch / enforce_many: the generic host-loop fallbacks in Engine
+    # are already the right (only) semantics for a sequential baseline —
+    # `solve_many` likewise degrades to one search at a time on this engine.

@@ -7,13 +7,29 @@ support test for every (x, a) each step — kept as the fidelity baseline.
 
 from __future__ import annotations
 
+from typing import List
+
 import jax.numpy as jnp
 
 from repro.core import rtac
 from repro.core.csp import CSP
-from repro.core.engine import Engine, PreparedNetwork, as_changed
+from repro.core.engine import (
+    Engine,
+    PreparedMany,
+    PreparedNetwork,
+    as_changed,
+    resolve_instance_idx,
+)
 from repro.core.rtac import EnforceResult, SupportFn, einsum_support
 from . import register
+
+
+def _stack_networks(csps: List[CSP]):
+    """(B, n, n, d, d) cons + (B, n, n) mask — the stacked workload form."""
+    return (
+        jnp.stack([c.cons for c in csps]),
+        jnp.stack([c.mask for c in csps]),
+    )
 
 
 def _revise_for(support_fn: SupportFn):
@@ -28,6 +44,7 @@ class EinsumEngine(Engine):
     """Incremental RTAC (Prop. 2) with the einsum support contraction."""
 
     name = "einsum"
+    stacked_many = True
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -48,6 +65,17 @@ class EinsumEngine(Engine):
             revise_fn=self._revise_fn,
         )
 
+    def _prepare_many_payload(self, csps: List[CSP]):
+        return _stack_networks(csps)
+
+    def enforce_many(self, prepared: PreparedMany, doms, changed0=None, instance_idx=None) -> EnforceResult:
+        doms = jnp.asarray(doms)
+        idx = resolve_instance_idx(instance_idx, prepared.n_instances, doms.shape[0])
+        return rtac.enforce_many_generic(
+            prepared.payload, doms, as_changed(changed0), jnp.asarray(idx),
+            revise_fn=self._revise_fn,
+        )
+
 
 @register
 class FullEngine(Engine):
@@ -55,6 +83,7 @@ class FullEngine(Engine):
     step re-tests all (x, a) pairs, exactly as published."""
 
     name = "full"
+    stacked_many = True
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -69,3 +98,14 @@ class FullEngine(Engine):
     def enforce_batch(self, prepared: PreparedNetwork, doms, changed0=None) -> EnforceResult:
         cons, mask = prepared.payload
         return rtac.enforce_full_batch(cons, mask, jnp.asarray(doms), support_fn=self.support_fn)
+
+    def _prepare_many_payload(self, csps: List[CSP]):
+        return _stack_networks(csps)
+
+    def enforce_many(self, prepared: PreparedMany, doms, changed0=None, instance_idx=None) -> EnforceResult:
+        doms = jnp.asarray(doms)
+        idx = resolve_instance_idx(instance_idx, prepared.n_instances, doms.shape[0])
+        cons, mask = prepared.payload
+        return rtac.enforce_full_many(
+            cons, mask, doms, jnp.asarray(idx), support_fn=self.support_fn
+        )

@@ -21,7 +21,14 @@ from . import register
 
 
 class _PallasEngine(Engine):
-    """Shared prepare/enforce plumbing; subclasses pick the kernel binding."""
+    """Shared prepare/enforce plumbing; subclasses pick the kernel binding.
+
+    ``prepare_many``/``enforce_many`` use the generic per-instance fallback:
+    vmapping a `pallas_call` over the *constraint* operand would re-trace the
+    kernel per instance anyway in interpret mode, so the workload path keeps
+    one prepared (padded + bitpacked) network per instance and routes rows on
+    the host. Each instance still pays its O(n²d²) preparation exactly once.
+    """
 
     def __init__(self, block_rx: int = 8, block_ry: int = 8, interpret: bool = True):
         self.block_rx = block_rx

@@ -108,3 +108,9 @@ class ShardedEngine(Engine):
 
     def enforce_batch(self, prepared: PreparedNetwork, doms, changed0=None) -> EnforceResult:
         return self._run(prepared, jnp.asarray(doms), changed0)
+
+    # prepare_many / enforce_many: generic per-instance fallback. The sharded
+    # fixpoint replicates ONE constraint network's x-rows across the 'model'
+    # axis; stacking B different networks would multiply the dominant O(n²d²)
+    # residency by B per shard, which is exactly what this engine exists to
+    # avoid. Workloads of small instances belong on `einsum`/`full`.

@@ -1,0 +1,149 @@
+"""Problem registry — named, seeded CSP workload generators (DESIGN.md §6).
+
+Every family produces reproducible `repro.core.CSP` instances from a seed and
+a small set of knobs, with one designated *difficulty knob* so workloads can be
+swept from easy to phase-transition hard:
+
+    from repro.problems import generate, generate_batch, available_problems
+
+    csp  = generate("model_rb", n=24, seed=0)              # one instance
+    csps = generate_batch("model_rb", 32, n=24, seed=0)    # 32 instances
+                                                           # sharing (n, d)
+
+Registered families (see the family's ``description`` for knob semantics):
+
+    model_rb          Xu–Li Model RB random binary CSPs at the phase
+                      transition — the paper's Table 1 / Fig. 3 workload class
+    random_binary     classic model-A generator (paper §5.2 grid cells)
+    coloring_random   k-coloring of an Erdős–Rényi G(n, p) graph
+    coloring_kneser   k-coloring of a Kneser graph K(m, j) (χ = m − 2j + 2;
+                      (5, 2) is the Petersen graph)
+    pigeonhole        n pigeons into h holes (h = n − 1 ⇒ classically UNSAT)
+    nqueens           n-queens (lifted from examples/)
+    sudoku            seeded 9×9 puzzles with a givens-count difficulty knob
+                      (lifted from examples/)
+
+``generate_batch`` derives per-instance seeds as ``(seed, i)`` through
+``numpy.random.default_rng``, so batches are reproducible AND instance i is
+stable regardless of batch size. All instances of one batch share the same
+``(n_vars, dom_size)`` — the shape contract `Engine.prepare_many` requires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, List, Mapping
+
+from repro.core.csp import CSP
+
+Seed = Any  # int or tuple of ints — anything numpy.random.default_rng accepts
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemFamily:
+    """One registered generator: ``generator(seed=..., **knobs) -> CSP``."""
+
+    name: str
+    generator: Callable[..., CSP]
+    defaults: Mapping[str, Any]
+    difficulty_knob: str
+    description: str
+    deterministic: bool = False  # True: the seed does not affect the instance
+
+    def params(self, **overrides) -> Dict[str, Any]:
+        """Resolved knob dict (defaults + overrides), overrides validated."""
+        unknown = set(overrides) - set(self.defaults)
+        if unknown:
+            raise TypeError(
+                f"{self.name}: unknown knob(s) {sorted(unknown)}; "
+                f"available: {sorted(self.defaults)}"
+            )
+        return {**self.defaults, **overrides}
+
+    def generate(self, seed: Seed = 0, **overrides) -> CSP:
+        return self.generator(seed=seed, **self.params(**overrides))
+
+    def generate_batch(self, count: int, seed: int = 0, **overrides) -> List[CSP]:
+        """``count`` independent instances sharing (n, d): instance i is seeded
+        ``(seed, i)``, so it is reproducible and batch-size independent."""
+        params = self.params(**overrides)
+        return [self.generator(seed=(seed, i), **params) for i in range(count)]
+
+
+_REGISTRY: Dict[str, ProblemFamily] = {}
+
+
+def register_problem(
+    name: str,
+    *,
+    difficulty_knob: str,
+    description: str,
+    deterministic: bool = False,
+):
+    """Decorator: register ``fn(seed=..., **knobs) -> CSP`` under ``name``.
+    Knob defaults are read off the function signature."""
+
+    def deco(fn: Callable[..., CSP]) -> Callable[..., CSP]:
+        defaults = {
+            p.name: p.default
+            for p in inspect.signature(fn).parameters.values()
+            if p.name != "seed"
+        }
+        missing = [k for k, v in defaults.items() if v is inspect.Parameter.empty]
+        if missing:
+            raise TypeError(f"{name}: knobs {missing} need defaults")
+        if difficulty_knob not in defaults:
+            raise TypeError(f"{name}: difficulty knob {difficulty_knob!r} not a knob")
+        _REGISTRY[name] = ProblemFamily(
+            name=name,
+            generator=fn,
+            defaults=defaults,
+            difficulty_knob=difficulty_knob,
+            description=description,
+            deterministic=deterministic,
+        )
+        return fn
+
+    return deco
+
+
+def available_problems() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_problem(name: str) -> ProblemFamily:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown problem {name!r}; available: {available_problems()}")
+    return _REGISTRY[name]
+
+
+def generate(name: str, seed: Seed = 0, **overrides) -> CSP:
+    """One seeded instance of a registered family."""
+    return get_problem(name).generate(seed=seed, **overrides)
+
+
+def generate_batch(name: str, count: int, seed: int = 0, **overrides) -> List[CSP]:
+    """``count`` seeded instances sharing (n, d) — ready for
+    `Engine.prepare_many` / `repro.core.solve_many`."""
+    return get_problem(name).generate_batch(count, seed=seed, **overrides)
+
+
+# Import for side effect: each module registers its families.
+from . import random_binary as _random_binary  # noqa: E402,F401
+from . import coloring as _coloring  # noqa: E402,F401
+from . import structured as _structured  # noqa: E402,F401
+
+model_rb = _random_binary.model_rb
+model_rb_params = _random_binary.model_rb_params
+
+__all__ = [
+    "ProblemFamily",
+    "register_problem",
+    "available_problems",
+    "get_problem",
+    "generate",
+    "generate_batch",
+    "model_rb",
+    "model_rb_params",
+]

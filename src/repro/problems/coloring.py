@@ -1,0 +1,73 @@
+"""Graph k-coloring families: random G(n, p) graphs and Kneser graphs.
+
+Coloring maps onto the binary-CSP tensor encoding via `repro.core.coloring_csp`
+(one variable per vertex, domain = colors, ≠ on every edge). Two graph classes:
+
+- ``coloring_random``: Erdős–Rényi G(n, p). The difficulty knob is the number
+  of colors ``k`` — random graphs have a sharp k-colorability threshold in the
+  average degree, so sweeping k (or ``edge_prob``) crosses SAT → UNSAT.
+- ``coloring_kneser``: the Kneser graph K(m, j) — vertices are the j-subsets
+  of {0..m−1}, edges between disjoint subsets. Its chromatic number is the
+  celebrated χ = m − 2j + 2 (Lovász 1978), so ``excess`` colors relative to χ
+  gives a calibrated knob: excess ≥ 0 is satisfiable, −1 provably not.
+  K(5, 2) is the Petersen graph.
+"""
+
+from __future__ import annotations
+
+from itertools import combinations
+
+import numpy as np
+
+from repro.core.csp import CSP, coloring_csp
+from . import register_problem
+
+
+@register_problem(
+    "coloring_random",
+    difficulty_knob="k",
+    description=(
+        "k-coloring of an Erdős–Rényi G(n, edge_prob) graph; fewer colors / "
+        "denser edges is harder"
+    ),
+)
+def coloring_random(seed=0, n: int = 30, edge_prob: float = 0.2, k: int = 4) -> CSP:
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, k=1)
+    edge = rng.random(len(iu[0])) < edge_prob
+    adj = np.zeros((n, n), dtype=bool)
+    adj[iu[0][edge], iu[1][edge]] = True
+    adj |= adj.T
+    return coloring_csp(adj, k)
+
+
+def kneser_adjacency(m: int, j: int) -> np.ndarray:
+    """Adjacency of K(m, j): j-subsets of an m-set, adjacent iff disjoint."""
+    if not 0 < j or not 2 * j < m:
+        raise ValueError(f"Kneser graph needs 0 < j and 2j < m, got m={m}, j={j}")
+    verts = [frozenset(c) for c in combinations(range(m), j)]
+    n = len(verts)
+    adj = np.zeros((n, n), dtype=bool)
+    for a in range(n):
+        for b in range(a + 1, n):
+            if not verts[a] & verts[b]:
+                adj[a, b] = adj[b, a] = True
+    return adj
+
+
+@register_problem(
+    "coloring_kneser",
+    difficulty_knob="excess",
+    description=(
+        "k-coloring of the Kneser graph K(m, j) with k = χ + excess colors, "
+        "χ = m − 2j + 2; excess ≥ 0 is SAT, −1 UNSAT (K(5,2) = Petersen)"
+    ),
+    deterministic=True,
+)
+def coloring_kneser(seed=0, m: int = 5, j: int = 2, excess: int = 0) -> CSP:
+    del seed  # the graph is deterministic
+    chromatic = m - 2 * j + 2
+    k = chromatic + excess
+    if k < 1:
+        raise ValueError(f"excess={excess} leaves {k} colors")
+    return coloring_csp(kneser_adjacency(m, j), k)

@@ -1,0 +1,141 @@
+"""Multi-instance layer: `Engine.prepare_many`/`enforce_many` parity across
+backends, and `solve_many` ≡ sequential `mac_solve` — solutions AND
+per-instance search statistics — on three problem families, including the
+acceptance-criterion batch of 32 Model-RB instances.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import mac_solve, solve_many
+from repro.engines import available_engines, get_engine
+from repro.problems import generate_batch
+
+ENGINES = available_engines()
+
+
+def _batch(name="model_rb", count=6, **kw):
+    kw.setdefault("seed", 0)
+    return generate_batch(name, count, **kw)
+
+
+# --- enforce_many parity ----------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_enforce_many_matches_per_instance_enforce(engine):
+    csps = _batch(count=5, n=12, hardness=0.9)
+    eng = get_engine(engine)
+    pm = eng.prepare_many(csps)
+    assert pm.n_instances == 5 and (pm.n_vars, pm.dom_size) == (12, csps[0].dom_size)
+
+    doms = np.stack([np.asarray(c.dom) for c in csps])
+    res = pm.enforce_many(doms)
+    for i, csp in enumerate(csps):
+        one = eng.prepare(csp).enforce()
+        assert bool(np.asarray(res.consistent)[i]) == bool(np.asarray(one.consistent))
+        if bool(np.asarray(one.consistent)):
+            np.testing.assert_array_equal(np.asarray(res.dom)[i], np.asarray(one.dom))
+        # per-instance work counters survive the shared dispatch
+        assert int(np.asarray(res.n_recurrences)[i]) == int(np.asarray(one.n_recurrences))
+
+
+@pytest.mark.parametrize("engine", ["einsum", "full", "ac3"])
+def test_enforce_many_instance_idx_routing(engine):
+    csps = _batch(count=4, n=10, hardness=0.8)
+    pm = get_engine(engine).prepare_many(csps)
+    doms = np.stack([np.asarray(c.dom) for c in csps])
+    ref = pm.enforce_many(doms)
+    idx = np.array([2, 0, 2, 3, 1], np.int32)  # repeats + permutation
+    res = pm.enforce_many(doms[idx], instance_idx=idx)
+    for row, j in enumerate(idx):
+        assert bool(np.asarray(res.consistent)[row]) == bool(np.asarray(ref.consistent)[j])
+        np.testing.assert_array_equal(np.asarray(res.dom)[row], np.asarray(ref.dom)[j])
+
+
+def test_prepare_many_validates_shapes_and_idx():
+    eng = get_engine("einsum")
+    with pytest.raises(ValueError, match="at least one"):
+        eng.prepare_many([])
+    mixed = _batch(count=1, n=10) + _batch(count=1, n=12)
+    with pytest.raises(ValueError, match="must share"):
+        eng.prepare_many(mixed)
+    csps = _batch(count=3, n=10)
+    pm = eng.prepare_many(csps)
+    doms = np.stack([np.asarray(c.dom) for c in csps])
+    with pytest.raises(ValueError, match="instance_idx"):
+        pm.enforce_many(doms[:2])  # 2 rows, 3 instances, no idx
+    with pytest.raises(ValueError, match="out of range"):
+        pm.enforce_many(doms, instance_idx=[0, 1, 7])
+
+
+# --- solve_many ≡ sequential mac_solve (acceptance criterion) ---------------
+
+
+def _assert_portfolio_matches_sequential(csps, engine, **kw):
+    sols, stats = solve_many(csps, engine=engine, **kw)
+    assert len(sols) == len(stats) == len(csps)
+    n_solved = 0
+    for i, csp in enumerate(csps):
+        ref_sol, ref_st = mac_solve(csp, engine=engine, **kw)
+        assert sols[i] == ref_sol, f"instance {i}: solution diverged"
+        assert stats[i].n_assignments == ref_st.n_assignments, f"instance {i}"
+        assert stats[i].n_backtracks == ref_st.n_backtracks, f"instance {i}"
+        assert stats[i].recurrences == ref_st.recurrences, f"instance {i}"
+        assert stats[i].revisions == ref_st.revisions, f"instance {i}"
+        n_solved += sols[i] is not None
+    return n_solved
+
+
+def test_solve_many_model_rb_32_instances():
+    # the paper's workload class, at the phase transition: a mix of SAT and
+    # UNSAT instances, every one bit-identical to its sequential solve
+    csps = _batch("model_rb", count=32, n=10, hardness=1.0, seed=5)
+    n_solved = _assert_portfolio_matches_sequential(csps, "einsum")
+    assert 0 < n_solved < 32  # straddles the transition — both outcomes present
+
+
+def test_solve_many_coloring_family():
+    csps = _batch("coloring_random", count=8, n=12, edge_prob=0.3, k=3, seed=1)
+    _assert_portfolio_matches_sequential(csps, "einsum")
+
+
+def test_solve_many_pigeonhole_family():
+    # deterministic UNSAT instances: every search must exhaust identically
+    csps = _batch("pigeonhole", count=4, n=5)
+    sols, _ = solve_many(csps, engine="einsum")
+    assert sols == [None] * 4
+    _assert_portfolio_matches_sequential(csps, "einsum")
+
+
+def test_solve_many_sequential_engine_fallback():
+    # ac3 has supports_batch=False: solve_many degrades to per-instance drives
+    csps = _batch("model_rb", count=4, n=10, hardness=1.0, seed=5)
+    _assert_portfolio_matches_sequential(csps, "ac3")
+
+
+def test_solve_many_unbatched_children():
+    csps = _batch("model_rb", count=4, n=10, hardness=1.0, seed=5)
+    _assert_portfolio_matches_sequential(csps, "einsum", batched_children=False)
+
+
+def test_solve_many_per_instance_budget():
+    csps = _batch("pigeonhole", count=3, n=7)  # hard UNSAT: budget must bite
+    sols, stats = solve_many(csps, engine="einsum", max_assignments=5)
+    assert sols == [None] * 3
+    for st in stats:
+        assert st.n_assignments <= 6
+    ref_sol, ref_st = mac_solve(csps[0], engine="einsum", max_assignments=5)
+    assert ref_sol is None and stats[0].n_assignments == ref_st.n_assignments
+
+
+def test_solve_many_empty():
+    assert solve_many([], engine="einsum") == ([], [])
+
+
+def test_solve_many_stats_are_per_instance():
+    csps = _batch("model_rb", count=3, n=10, hardness=0.6, seed=2)
+    sols, stats = solve_many(csps, engine="einsum")
+    for st in stats:
+        assert st.recurrences and not st.revisions  # tensor-engine unit filed
+        assert st.enforce_seconds  # lockstep rounds attributed to participants
