@@ -13,7 +13,6 @@ CI's bench-smoke job fails on a >3× regression of any cell
 
 from __future__ import annotations
 
-import json
 import platform
 import time
 from pathlib import Path
@@ -24,10 +23,8 @@ import numpy as np
 from repro.core import assign_np
 from repro.engines import available_engines, get_engine
 from repro.problems import generate
-
-OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
-
-SCHEMA = "bench_engines/v2"
+from . import tracker
+from .tracker import OUT_PATH
 
 # 3 families × 3 sizes, CI-sized — the tracked quantity is the *relative*
 # per-engine trajectory across PRs, not paper-scale absolutes.
@@ -97,17 +94,10 @@ def bench_cell(engine_name: str, family: str, knobs: dict, n_assignments: int = 
 
 def main(engines=None, out_path: Path = OUT_PATH) -> dict:
     engines = list(engines) if engines else available_engines()
-    report = {"schema": SCHEMA, "platform": platform.platform(), "engines": {}}
-    if out_path.exists():  # keep sections other benchmarks own (e.g. "many")
-        try:
-            prior = json.loads(out_path.read_text())
-            if prior.get("schema") == SCHEMA and "many" in prior:
-                report["many"] = prior["many"]
-        except (json.JSONDecodeError, OSError):
-            pass
+    results = {}
     for name in engines:
         cells = [bench_cell(name, family, knobs) for family, knobs in CELLS]
-        report["engines"][name] = cells
+        results[name] = cells
         for c in cells:
             if c.get("inconsistent_root"):
                 continue
@@ -115,7 +105,9 @@ def main(engines=None, out_path: Path = OUT_PATH) -> dict:
                 f"engines,{name},{c['label']},"
                 f"{c['prepare_ms']:.3f},{c['enforce_ms_median']:.3f}"
             )
-    out_path.write_text(json.dumps(report, indent=1))
+    report = tracker.merge_section(
+        "engines", results, out_path, extra={"platform": platform.platform()}
+    )
     print(f"engines: wrote {out_path}")
     return report
 

@@ -12,14 +12,13 @@ verified identical before timings are reported.
 
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
 from repro.core import mac_solve, solve_many
 from repro.problems import generate_batch
-
-OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
+from . import tracker
+from .tracker import OUT_PATH
 
 WORKLOADS = [
     ("model_rb", {"n": 12, "hardness": 1.0}, 32),
@@ -64,16 +63,7 @@ def main(engine: str = "einsum", out_path: Path = OUT_PATH) -> list:
             f"{r['sequential_instances_per_s']:.3f},{r['many_instances_per_s']:.3f},"
             f"{r['speedup']:.3f}"
         )
-    report = {"schema": "bench_engines/v2", "engines": {}}
-    if out_path.exists():  # merge into the tracker file bench_engines owns,
-        try:  # but never graft onto a stale/foreign schema
-            prior = json.loads(out_path.read_text())
-            if prior.get("schema") == report["schema"]:
-                report = prior
-        except (json.JSONDecodeError, OSError):
-            pass
-    report["many"] = rows
-    out_path.write_text(json.dumps(report, indent=1))
+    tracker.merge_section("many", rows, out_path)
     print(f"many: wrote {out_path}")
     return rows
 

@@ -1,0 +1,77 @@
+"""Service throughput + tail latency -> the "service" section of
+BENCH_engines.json.
+
+Replays a fixed seeded Poisson trace through `SolverService` (DESIGN.md §7)
+and records sustained instances/second, p50/p95/p99 latency, and dispatch
+occupancy. The replay clock fast-forwards idle gaps, so the numbers measure
+the service machinery (continuous batching, cache, buckets), not sleeps.
+
+    PYTHONPATH=src python -m benchmarks.run --only service
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.service import FastForwardClock, SolverService, poisson_trace, replay
+from . import tracker
+from .tracker import OUT_PATH
+
+#: (label, families, rate/s, duration s) — fixed seeds so runs are comparable
+TRACES = [
+    ("poisson_mixed_r12_d4", ["model_rb", "coloring_random"], 12.0, 4.0),
+]
+FULL_TRACES = [
+    ("poisson_mixed_r12_d4", ["model_rb", "coloring_random"], 12.0, 4.0),
+    ("poisson_mixed_r8_d20", ["model_rb", "coloring_random"], 8.0, 20.0),
+]
+
+
+def bench_trace(label: str, families, rate: float, duration: float,
+                engine: str = "einsum", seed: int = 0) -> dict:
+    events = poisson_trace(families, rate=rate, duration=duration, seed=seed)
+    clock = FastForwardClock()
+    svc = SolverService(engine=engine, clock=clock)
+    t0 = time.perf_counter()
+    requests = replay(svc, events, clock)
+    wall_s = time.perf_counter() - t0
+    snap = svc.snapshot()
+    return {
+        "trace": label,
+        "engine": engine,
+        "families": list(families),
+        "rate": rate,
+        "duration": duration,
+        "requests": len(requests),
+        "completed": snap["completed"],
+        "n_solved": sum(r.solution is not None for r in requests),
+        "wall_s": round(wall_s, 3),
+        "throughput_rps": snap["throughput_rps"],
+        "p50_ms": snap["p50_ms"],
+        "p95_ms": snap["p95_ms"],
+        "p99_ms": snap["p99_ms"],
+        "mean_rows_per_dispatch": snap["mean_rows_per_dispatch"],
+        "rounds": snap["rounds"],
+        "cache": snap["cache"],
+    }
+
+
+def main(engine: str = "einsum", quick: bool = True, out_path: Path = OUT_PATH) -> list:
+    rows = [
+        bench_trace(label, fams, rate, dur, engine=engine)
+        for label, fams, rate, dur in (TRACES if quick else FULL_TRACES)
+    ]
+    for r in rows:
+        print(
+            f"service,{r['engine']},{r['trace']},{r['requests']},"
+            f"{r['throughput_rps']:.3f},{r['p50_ms']:.3f},{r['p95_ms']:.3f},"
+            f"{r['p99_ms']:.3f},{r['mean_rows_per_dispatch']:.3f}"
+        )
+    tracker.merge_section("service", rows, out_path)
+    print(f"service: wrote {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

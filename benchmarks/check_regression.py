@@ -9,7 +9,12 @@ order-of-magnitude mistakes (accidental re-preparation, lost jit caching, a
 host sync in the hot path). Cells are matched by (engine, label); an engine or
 cell present in the baseline but missing from the fresh run fails the check,
 new cells are reported but pass (the baseline is regenerated in the same PR
-that adds them). Exit code 0 = ok, 1 = regression/mismatch.
+that adds them).
+
+The "service" section (bench_service trace replays) is gated the same way:
+p95 latency may not regress ``> tolerance``× and sustained throughput may not
+drop ``> tolerance``×, matched by (engine, trace). Exit code 0 = ok,
+1 = regression/mismatch.
 """
 
 from __future__ import annotations
@@ -57,6 +62,48 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
             failures.append(f"{engine} {label}: {METRIC} {b} -> {f} ({ratio:.2f}x > {tolerance}x)")
     for key in sorted(set(fresh_cells) - set(base_cells)):
         print(f"new  {key[0]:14s} {key[1]:34s} (no baseline — passes)")
+    failures.extend(compare_service(baseline, fresh, tolerance))
+    return failures
+
+
+def index_service(report: dict) -> dict:
+    return {(r["engine"], r["trace"]): r for r in report.get("service", [])}
+
+
+def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Gate the service section: p95 latency up or throughput down by more
+    than ``tolerance``× fails. Same missing/new-cell policy as engine cells."""
+    failures = []
+    base_rows, fresh_rows = index_service(baseline), index_service(fresh)
+    eps = 1e-3  # one rounding quantum floor, as for the latency cells
+    for key in sorted(base_rows):
+        engine, trace = key
+        if key not in fresh_rows:
+            failures.append(f"service {engine} {trace}: row missing from fresh run")
+            continue
+        b, f = base_rows[key], fresh_rows[key]
+        lat_ratio = (f["p95_ms"] + eps) / (b["p95_ms"] + eps)
+        tput_ratio = (b["throughput_rps"] + eps) / (f["throughput_rps"] + eps)
+        worst = max(lat_ratio, tput_ratio)
+        status = "FAIL" if worst > tolerance else "ok"
+        print(
+            f"{status:4s} service:{engine:7s} {trace:34s} "
+            f"p95 {b['p95_ms']:8.1f} -> {f['p95_ms']:8.1f} ms ({lat_ratio:.2f}x), "
+            f"tput {b['throughput_rps']:.2f} -> {f['throughput_rps']:.2f} rps "
+            f"({1 / max(tput_ratio, eps):.2f}x)"
+        )
+        if lat_ratio > tolerance:
+            failures.append(
+                f"service {engine} {trace}: p95_ms {b['p95_ms']} -> {f['p95_ms']} "
+                f"({lat_ratio:.2f}x > {tolerance}x)"
+            )
+        if tput_ratio > tolerance:
+            failures.append(
+                f"service {engine} {trace}: throughput_rps {b['throughput_rps']} -> "
+                f"{f['throughput_rps']} ({tput_ratio:.2f}x drop > {tolerance}x)"
+            )
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"new  service:{key[0]:7s} {key[1]:34s} (no baseline — passes)")
     return failures
 
 

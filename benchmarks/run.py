@@ -1,4 +1,4 @@
-"""Benchmark orchestrator — one function per paper table/figure.
+"""Benchmark orchestrator — one function per paper table/figure or subsystem.
 
 Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
 --full for the paper's complete grid (n up to 1000).
@@ -9,8 +9,13 @@ Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
            BENCH_engines.json (the cross-PR perf trajectory)
   many     instances/second of solve_many vs sequential mac_solve ->
            BENCH_engines.json "many" section
+  service  SolverService trace replay: sustained throughput + tail latency ->
+           BENCH_engines.json "service" section
   roofline deliverable (g) — three-term roofline per dry-run artifact (reads
            artifacts/dryrun; run `python -m repro.launch.dryrun --all` first)
+
+``--only <target>`` runs one target; an unknown target exits non-zero and
+prints the valid target list (no more silently running nothing on a typo).
 """
 
 from __future__ import annotations
@@ -19,41 +24,76 @@ import argparse
 import sys
 
 
-def main() -> None:
+def _run_table1(quick: bool) -> None:
+    from . import bench_table1
+
+    bench_table1.main(quick=quick)
+
+
+def _run_fig3(quick: bool) -> None:
+    from . import bench_fig3
+
+    bench_fig3.main(quick=quick)
+
+
+def _run_engines(quick: bool) -> None:
+    from . import bench_engines
+
+    bench_engines.main()
+
+
+def _run_many(quick: bool) -> None:
+    from . import bench_many
+
+    bench_many.main()
+
+
+def _run_service(quick: bool) -> None:
+    from . import bench_service
+
+    bench_service.main(quick=quick)
+
+
+def _run_roofline(quick: bool) -> None:
+    from . import roofline
+
+    try:
+        roofline.main()
+    except Exception as e:  # unexpected failure; missing artifacts are
+        print(f"roofline,skipped,{e}", file=sys.stderr)  # handled inside
+
+
+#: registration order is execution order for a full run
+TARGETS = {
+    "table1": _run_table1,
+    "fig3": _run_fig3,
+    "engines": _run_engines,
+    "many": _run_many,
+    "service": _run_service,
+    "roofline": _run_roofline,
+}
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale grid")
-    ap.add_argument(
-        "--only",
-        choices=["table1", "fig3", "engines", "many", "roofline"],
-        default=None,
-    )
-    args = ap.parse_args()
+    ap.add_argument("--only", default=None, metavar="TARGET",
+                    help=f"run one target; valid: {', '.join(TARGETS)}")
+    args = ap.parse_args(argv)
     quick = not args.full
 
-    if args.only in (None, "table1"):
-        from . import bench_table1
-
-        bench_table1.main(quick=quick)
-    if args.only in (None, "fig3"):
-        from . import bench_fig3
-
-        bench_fig3.main(quick=quick)
-    if args.only in (None, "engines"):
-        from . import bench_engines
-
-        bench_engines.main()
-    if args.only in (None, "many"):
-        from . import bench_many
-
-        bench_many.main()
-    if args.only in (None, "roofline"):
-        from . import roofline
-
-        try:
-            roofline.main()
-        except Exception as e:  # unexpected failure; missing artifacts are
-            print(f"roofline,skipped,{e}", file=sys.stderr)  # handled inside
+    if args.only is not None and args.only not in TARGETS:
+        print(
+            f"benchmarks.run: unknown target {args.only!r}; "
+            f"valid targets: {', '.join(TARGETS)}",
+            file=sys.stderr,
+        )
+        return 2
+    for name, fn in TARGETS.items():
+        if args.only in (None, name):
+            fn(quick)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

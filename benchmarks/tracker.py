@@ -1,0 +1,39 @@
+"""The one owner of BENCH_engines.json section merging.
+
+Every benchmark that records into the cross-PR tracker file goes through
+``merge_section``: read the prior report, keep every section a *different*
+benchmark owns (same-schema only — never graft onto a stale/foreign schema),
+replace this benchmark's section, write back. One implementation means a
+schema bump happens in exactly one place and no benchmark can silently drop
+a sibling's section.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+SCHEMA = "bench_engines/v2"
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
+
+
+def merge_section(key: str, value, out_path: Path = OUT_PATH,
+                  extra: Optional[dict] = None) -> dict:
+    """Set ``report[key] = value`` in the tracker file, preserving every other
+    section of a same-schema prior report. ``extra`` merges top-level metadata
+    (e.g. platform). Returns the full report written."""
+    report = {"schema": SCHEMA, "engines": {}}
+    if out_path.exists():
+        try:
+            prior = json.loads(out_path.read_text())
+            if prior.get("schema") == SCHEMA:
+                report = prior
+        except (json.JSONDecodeError, OSError):
+            pass
+    report[key] = value
+    if extra:
+        report.update(extra)
+    out_path.write_text(json.dumps(report, indent=1))
+    return report

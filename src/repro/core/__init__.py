@@ -18,14 +18,20 @@ from .rtac import (
     einsum_support,
     enforce,
     enforce_batch,
-    enforce_csp,
     enforce_full,
     enforce_full_batch,
 )
 from .ac3 import AC3Result, build_neighbours, enforce_ac3, assign_np
 from .brute import ac_closure_brute, count_solutions, solve_brute
-from .engine import Engine, PreparedMany, PreparedNetwork
-from .search import SearchStats, check_solution, mac_solve, resolve_engine, solve_many
+from .engine import Engine, PreparedMany, PreparedNetwork, SlotPool
+from .search import (
+    LockstepDriver,
+    SearchStats,
+    check_solution,
+    mac_solve,
+    resolve_engine,
+    solve_many,
+)
 
 __all__ = [
     "CSP",
@@ -43,7 +49,6 @@ __all__ = [
     "einsum_support",
     "enforce",
     "enforce_batch",
-    "enforce_csp",
     "enforce_full",
     "enforce_full_batch",
     "AC3Result",
@@ -56,6 +61,8 @@ __all__ = [
     "Engine",
     "PreparedMany",
     "PreparedNetwork",
+    "SlotPool",
+    "LockstepDriver",
     "SearchStats",
     "check_solution",
     "mac_solve",

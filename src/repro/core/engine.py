@@ -180,6 +180,100 @@ class PreparedMany:
         return self.engine.enforce_many(self, doms, changed0, instance_idx)
 
 
+def route_rows_on_host(enforce_row, doms, changed0: Changed, idx) -> EnforceResult:
+    """The generic host-routing dispatch shared by `Engine.enforce_many` and
+    `SlotPool.enforce_rows`: row i goes through ``enforce_row(idx[i], dom_i,
+    changed_i)`` and the per-row results are stacked into one EnforceResult."""
+    results = [
+        enforce_row(int(j), doms[i], None if changed0 is None else changed0[i])
+        for i, j in enumerate(idx)
+    ]
+    return EnforceResult(
+        dom=np.stack([np.asarray(r.dom) for r in results]),
+        consistent=np.asarray([bool(r.consistent) for r in results]),
+        n_recurrences=np.asarray([int(r.n_recurrences) for r in results]),
+    )
+
+
+class SlotPool:
+    """An *open-world* `PreparedMany`: a fixed-capacity table of resident
+    network slots that searches join and leave mid-flight (DESIGN.md §7).
+
+    Where `PreparedMany` stacks a closed batch of networks once, a `SlotPool`
+    is the continuous-batching substrate of `repro.service`: ``install``
+    compiles one network into a slot (the only O(n²d²) step, paid once per
+    distinct network), ``enforce_rows`` resolves R domains — row i against
+    slot ``slot_idx[i]`` — and ``release`` frees a slot for reuse when its
+    last in-flight search retires. All slots share one (n_vars, dom_size)
+    bucket shape, so every round reuses the same jitted program.
+
+    This generic implementation keeps one `PreparedNetwork` per slot and
+    routes rows on the host (works for every engine, including AC3). Stacked
+    engines override `Engine.open_slot_pool` with a device-resident slot table
+    and a single gather+vmap dispatch (`repro.engines.einsum`).
+    """
+
+    stacked: ClassVar[bool] = False
+
+    def __init__(self, engine: "Engine", n_vars: int, dom_size: int, capacity: int):
+        if capacity < 1:
+            raise ValueError("SlotPool needs capacity >= 1")
+        self.engine = engine
+        self.n_vars = n_vars
+        self.dom_size = dom_size
+        self._nets: List[Optional[PreparedNetwork]] = [None] * capacity
+
+    @property
+    def capacity(self) -> int:
+        return len(self._nets)
+
+    def _check(self, slot: int, installing: bool) -> None:
+        if not 0 <= slot < self.capacity:
+            raise ValueError(f"slot {slot} out of range [0, {self.capacity})")
+        if installing and self._nets[slot] is not None:
+            raise ValueError(f"slot {slot} already installed; release it first")
+
+    def install(self, slot: int, csp: CSP) -> None:
+        """Compile ``csp``'s network into ``slot`` (must match the pool shape)."""
+        self._check(slot, installing=True)
+        if tuple(csp.dom.shape) != (self.n_vars, self.dom_size):
+            raise ValueError(
+                f"install: csp shape {tuple(csp.dom.shape)} != pool bucket "
+                f"({self.n_vars}, {self.dom_size})"
+            )
+        self._nets[slot] = self._prepare_slot(slot, csp)
+
+    def _prepare_slot(self, slot: int, csp: CSP):
+        """Backend hook: build the slot's resident form. The generic pool keeps
+        a `PreparedNetwork`; stacked pools write device tensors and return a
+        truthy sentinel."""
+        return self.engine.prepare(csp)
+
+    def release(self, slot: int) -> None:
+        """Free a slot (its network may be overwritten by a later install)."""
+        self._check(slot, installing=False)
+        self._nets[slot] = None
+
+    def grow(self, capacity: int) -> None:
+        """Enlarge the table (amortized doubling in the service layer)."""
+        if capacity < self.capacity:
+            raise ValueError("SlotPool.grow cannot shrink")
+        self._nets.extend([None] * (capacity - self.capacity))
+
+    def enforce_rows(self, doms, changed0: Changed = None, slot_idx=None):
+        """Enforce R domains (R, n, d), row i against slot ``slot_idx[i]``."""
+        doms = np.asarray(doms)
+        idx = resolve_instance_idx(slot_idx, self.capacity, doms.shape[0])
+
+        def enforce_row(j, dom, ch):
+            net = self._nets[j]
+            if net is None:
+                raise ValueError(f"enforce_rows: slot {j} is empty")
+            return net.enforce(dom, ch)
+
+        return route_rows_on_host(enforce_row, doms, changed0, idx)
+
+
 def resolve_instance_idx(instance_idx, n_instances: int, n_rows: int) -> np.ndarray:
     """Normalize/validate the row→instance map of ``enforce_many``."""
     if instance_idx is None:
@@ -274,15 +368,17 @@ class Engine(abc.ABC):
         doms = np.asarray(doms)
         idx = resolve_instance_idx(instance_idx, prepared.n_instances, doms.shape[0])
         nets: List[PreparedNetwork] = prepared.payload
-        results = [
-            self.enforce(nets[int(j)], doms[i], None if changed0 is None else changed0[i])
-            for i, j in enumerate(idx)
-        ]
-        return EnforceResult(
-            dom=np.stack([np.asarray(r.dom) for r in results]),
-            consistent=np.asarray([bool(r.consistent) for r in results]),
-            n_recurrences=np.asarray([int(r.n_recurrences) for r in results]),
+        return route_rows_on_host(
+            lambda j, dom, ch: self.enforce(nets[j], dom, ch), doms, changed0, idx
         )
+
+    # --- open-world slots (continuous batching, DESIGN.md §7) ---------------
+
+    def open_slot_pool(self, n_vars: int, dom_size: int, capacity: int) -> SlotPool:
+        """A `SlotPool` of ``capacity`` resident network slots sharing one
+        (n_vars, dom_size) bucket shape. Generic host-routing implementation;
+        stacked engines override with a device-resident slot table."""
+        return SlotPool(self, n_vars, dom_size, capacity)
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<{type(self).__name__} name={self.name!r}>"

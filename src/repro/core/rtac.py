@@ -261,10 +261,6 @@ def enforce_full_many(
 # CSP-level conveniences ------------------------------------------------------
 
 
-def enforce_csp(csp: CSP, changed0=None, support_fn: SupportFn = einsum_support):
-    return enforce(csp.cons, csp.mask, csp.dom, changed0, support_fn=support_fn)
-
-
 def assign(dom: Array, var_idx, val_idx) -> Array:
     """Alg. 2 ``assign``: collapse dom(var) to {val} (traced-index safe)."""
     n, d = dom.shape

@@ -24,11 +24,13 @@ Beyond the paper, two batching axes (DESIGN.md §6):
   sequential ``mac_solve`` (only wall-clock attribution differs).
 
 The search logic itself is written once, as a coroutine that *yields*
-enforcement requests and receives results; ``mac_solve`` drives one coroutine,
-``solve_many`` multiplexes B of them. ``engine`` accepts an `Engine` instance
-or a registry name (`repro.engines.available_engines()`); the pre-Engine
-strings "rtac" / "rtac_full" still resolve (with a DeprecationWarning) for one
-release.
+enforcement requests and receives results. `LockstepDriver` multiplexes any
+number of coroutines over one row-dispatch function in an **open world**:
+searches are admitted between rounds (their root request simply joins the next
+dispatch) and finished searches free their rows mid-flight — the substrate of
+both the closed-batch ``solve_many`` portfolio and the continuous-batching
+`repro.service.SolverService` (DESIGN.md §7). ``engine`` accepts an `Engine`
+instance or a registry name (`repro.engines.available_engines()`).
 """
 
 from __future__ import annotations
@@ -36,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Generator, List, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, Generator, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -54,6 +56,10 @@ class SearchStats:
     recurrences: List[int] = dataclasses.field(default_factory=list)
     revisions: List[int] = dataclasses.field(default_factory=list)
     enforce_seconds: List[float] = dataclasses.field(default_factory=list)
+    #: True iff the search stopped on its ``max_assignments`` budget — a
+    #: (None, stats) result with ``exhausted=True`` is *inconclusive*, NOT a
+    #: proof of unsatisfiability.
+    exhausted: bool = False
 
     @property
     def mean_recurrences(self) -> float:
@@ -80,8 +86,8 @@ def _select_var(dom_np: np.ndarray, assigned: np.ndarray) -> int:
 
 
 def resolve_engine(engine: Union[Engine, str], support_fn=None) -> Engine:
-    """Engine instance passthrough, or registry lookup by name (legacy names
-    warn). ``support_fn`` is honoured by the einsum-contraction engines."""
+    """Engine instance passthrough, or registry lookup by name.
+    ``support_fn`` is honoured by the einsum-contraction engines."""
     if isinstance(engine, Engine):
         if support_fn is not None:
             warnings.warn(
@@ -92,7 +98,7 @@ def resolve_engine(engine: Union[Engine, str], support_fn=None) -> Engine:
     from repro.engines import get_engine
 
     opts = {}
-    if support_fn is not None and engine in ("rtac", "rtac_full", "einsum", "full"):
+    if support_fn is not None and engine in ("einsum", "full"):
         opts["support_fn"] = support_fn
     return get_engine(engine, **opts)
 
@@ -123,14 +129,22 @@ def _mac_coroutine(
     batched_children: bool,
     max_assignments: Optional[int],
     stats: SearchStats,
+    n_active: Optional[int] = None,
 ) -> _MacGen:
     """Alg. 2 as a coroutine: yields `_Request`s, receives `_Reply`s, returns
     the solution (or None). The coroutine owns every search decision and the
     assignment/backtrack counters; the driver owns dispatch, padding, timing
     and work-counter recording — so one search behaves identically whether it
-    is driven alone (`mac_solve`) or multiplexed with others (`solve_many`)."""
+    is driven alone (`mac_solve`) or multiplexed with others (`solve_many`).
+
+    ``n_active`` marks the first ``n_active`` variables as the real problem:
+    variables beyond it (bucket padding under the §2 contract — unconstrained,
+    singleton domain) start out assigned, are never branched on, and are
+    excluded from the returned solution, so a padded search takes bit-identical
+    decisions to the unpadded one."""
     dom0 = np.asarray(csp.dom)
     n, _ = dom0.shape
+    n_real = n if n_active is None else n_active
 
     # Root propagation (Alg. 2 line 3).
     reply = yield _Request(dom0[None], None)
@@ -138,10 +152,11 @@ def _mac_coroutine(
         return None
 
     assigned = np.zeros((n,), dtype=bool)
+    assigned[n_real:] = True
 
     def dfs(dom_np: np.ndarray) -> _MacGen:
         if assigned.all():
-            return [int(np.argmax(dom_np[x])) for x in range(n)]
+            return [int(np.argmax(dom_np[x])) for x in range(n_real)]
         var = _select_var(dom_np, assigned)
         values = [int(v) for v in np.nonzero(dom_np[var])[0]]
 
@@ -237,8 +252,180 @@ def mac_solve(
     try:
         sol = _drive_single(prepared, gen, counts, stats, collect_stats)
     except BudgetExceeded:
+        stats.exhausted = True
         return None, stats
     return sol, stats
+
+
+# ---------------------------------------------------------------------------
+# LockstepDriver — open-world lockstep multiplexing (DESIGN.md §6/§7)
+# ---------------------------------------------------------------------------
+
+
+#: row dispatcher: (doms (R, n, d), changed (R, n), idx (R,) int32) -> EnforceResult.
+#: ``idx[i]`` routes row i to its own constraint network — a `PreparedMany`
+#: instance index for the closed-batch portfolio, a `SlotPool` slot for the
+#: open-world service.
+RowDispatch = Callable[[np.ndarray, np.ndarray, np.ndarray], "object"]
+
+
+class LockstepDriver:
+    """Multiplexes MAC-search coroutines over ONE row dispatcher, open-world.
+
+    Each ``round()`` concatenates every live search's pending enforcement
+    frontier into a single dispatch, scatters the replies back, and advances
+    each search to its next request. Unlike the closed batch that
+    ``solve_many`` historically hard-coded, membership is dynamic:
+
+    - ``admit`` joins a new search *between* rounds — its root propagation
+      simply rides the next dispatch alongside everyone else's frontiers;
+    - a search that finishes (solution, exhaustion, or budget) is reported by
+      the ``round()`` that retired it and frees its rows immediately — the
+      batch never drains to a stragglers-only tail before new work can enter;
+    - ``cancel`` evicts a search mid-flight (deadline expiry in the service).
+
+    The driver owns dispatch, padding, timing, and work-counter filing; every
+    search still takes exactly the decisions it would take alone (solutions
+    and per-instance statistics are bit-identical to sequential `mac_solve` —
+    only ``enforce_seconds`` attribution differs, splitting each round's
+    wall-clock across participants proportionally to their row counts).
+    """
+
+    def __init__(
+        self,
+        dispatch: RowDispatch,
+        n_vars: int,
+        count_unit: str = "recurrences",
+        pad_rounds: bool = True,
+    ):
+        self._dispatch = dispatch
+        self._n = n_vars
+        self._count_unit = count_unit
+        self._pad_rounds = pad_rounds
+        self._gens: Dict[object, _MacGen] = {}
+        self._pending: Dict[object, _Request] = {}
+        self._idx: Dict[object, int] = {}
+        self._stats: Dict[object, SearchStats] = {}
+        self._collect: Dict[object, bool] = {}
+
+    # --- membership --------------------------------------------------------
+
+    def admit(
+        self,
+        key,
+        csp: CSP,
+        idx: int = 0,
+        *,
+        supports_batch: bool = True,
+        batched_children: bool = True,
+        n_active: Optional[int] = None,
+        max_assignments: Optional[int] = None,
+        collect_stats: bool = True,
+    ) -> SearchStats:
+        """Join a new search; it participates from the next ``round()`` on.
+        ``idx`` routes the search's rows to its constraint network. Returns
+        the live `SearchStats` (filled in as rounds run)."""
+        if key in self._gens:
+            raise ValueError(f"search key {key!r} already admitted")
+        stats = SearchStats()
+        gen = _mac_coroutine(
+            csp, supports_batch, batched_children, max_assignments, stats,
+            n_active=n_active,
+        )
+        self._pending[key] = gen.send(None)  # root request; always yields ≥ once
+        self._gens[key] = gen
+        self._idx[key] = int(idx)
+        self._stats[key] = stats
+        self._collect[key] = collect_stats
+        return stats
+
+    def cancel(self, key) -> SearchStats:
+        """Evict a live search (e.g. deadline expiry); frees its rows."""
+        self._gens.pop(key).close()
+        self._pending.pop(key)
+        self._idx.pop(key)
+        self._collect.pop(key)
+        return self._stats.pop(key)
+
+    @property
+    def active_keys(self) -> List:
+        return sorted(self._pending)
+
+    def is_active(self, key) -> bool:
+        return key in self._gens
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending)
+
+    @property
+    def n_pending_rows(self) -> int:
+        return sum(req.doms.shape[0] for req in self._pending.values())
+
+    # --- one lockstep round -------------------------------------------------
+
+    def round(self) -> Dict[object, Tuple[Optional[List[int]], SearchStats]]:
+        """Dispatch every live search's pending frontier as ONE call, advance
+        each search, and return ``{key: (solution | None, stats)}`` for the
+        searches that finished this round (their rows are freed)."""
+        if not self._pending:
+            return {}
+        order = sorted(self._pending)
+        sizes = [self._pending[k].doms.shape[0] for k in order]
+        doms = np.concatenate([self._pending[k].doms for k in order])
+        chs = np.concatenate(
+            [
+                self._pending[k].changed
+                if self._pending[k].changed is not None
+                else np.ones((self._pending[k].doms.shape[0], self._n), bool)
+                for k in order
+            ]
+        )
+        idx = np.repeat(np.asarray([self._idx[k] for k in order], np.int32), sizes)
+        r = len(idx)
+        # Pad the round up to a power of two only for stacked-dispatch engines
+        # (jit-shape reuse, as in the single-search frontier path); on the
+        # host-routing fallback padded rows would be real work thrown away.
+        r_p = _next_pow2(r) if self._pad_rounds else r
+        if r_p != r:
+            doms = np.concatenate([doms, np.repeat(doms[-1:], r_p - r, axis=0)])
+            chs = np.concatenate([chs, np.repeat(chs[-1:], r_p - r, axis=0)])
+            idx = np.concatenate([idx, np.repeat(idx[-1:], r_p - r)])
+
+        t0 = time.perf_counter()
+        res = self._dispatch(doms, chs, idx)
+        doms_out = np.asarray(res.dom)
+        cons_out = np.asarray(res.consistent)
+        ks = np.asarray(res.n_recurrences)
+        dt = time.perf_counter() - t0
+
+        off = 0
+        finished: Dict[object, Tuple[Optional[List[int]], SearchStats]] = {}
+        for k, b in zip(order, sizes):
+            rows = slice(off, off + b)
+            off += b
+            stats = self._stats[k]
+            if self._collect[k]:
+                stats.enforce_seconds.append(dt * b / r_p)
+                counts = (
+                    stats.recurrences
+                    if self._count_unit == "recurrences"
+                    else stats.revisions
+                )
+                counts.extend(int(v) for v in ks[rows])
+            try:
+                self._pending[k] = self._gens[k].send(
+                    _Reply(doms_out[rows], cons_out[rows])
+                )
+            except StopIteration as stop:
+                finished[k] = (stop.value, stats)
+            except BudgetExceeded:
+                stats.exhausted = True
+                finished[k] = (None, stats)
+        for k in finished:
+            del self._gens[k], self._pending[k], self._idx[k]
+            del self._stats[k], self._collect[k]
+        return finished
 
 
 # ---------------------------------------------------------------------------
@@ -291,67 +478,27 @@ def solve_many(
         return sols, stats
 
     prepared = eng.prepare_many(csps)  # the ONLY preparation in the whole run
-    all_stats = [SearchStats() for _ in csps]
-    counts = [
-        st.recurrences if eng.count_unit == "recurrences" else st.revisions
-        for st in all_stats
+    driver = LockstepDriver(
+        prepared.enforce_many,
+        prepared.n_vars,
+        count_unit=eng.count_unit,
+        pad_rounds=eng.stacked_many,
+    )
+    all_stats = [
+        driver.admit(
+            i,
+            csp,
+            idx=i,
+            batched_children=batched_children,
+            max_assignments=max_assignments,
+            collect_stats=collect_stats,
+        )
+        for i, csp in enumerate(csps)
     ]
     sols: List[Optional[List[int]]] = [None] * len(csps)
-    n = prepared.n_vars
-
-    gens: dict = {}
-    pending: dict = {}
-    for i, csp in enumerate(csps):
-        g = _mac_coroutine(csp, True, batched_children, max_assignments, all_stats[i])
-        pending[i] = g.send(None)  # root request; a coroutine always yields ≥ once
-        gens[i] = g
-
-    while pending:
-        order = sorted(pending)
-        sizes = [pending[i].doms.shape[0] for i in order]
-        doms = np.concatenate([pending[i].doms for i in order])
-        chs = np.concatenate(
-            [
-                pending[i].changed
-                if pending[i].changed is not None
-                else np.ones((pending[i].doms.shape[0], n), bool)
-                for i in order
-            ]
-        )
-        idx = np.repeat(np.asarray(order, np.int32), sizes)
-        r = len(idx)
-        # Pad the round up to a power of two only for stacked-dispatch engines
-        # (jit-shape reuse, as in the single-search frontier path); on the
-        # host-routing fallback padded rows would be real work thrown away.
-        r_p = _next_pow2(r) if eng.stacked_many else r
-        if r_p != r:
-            doms = np.concatenate([doms, np.repeat(doms[-1:], r_p - r, axis=0)])
-            chs = np.concatenate([chs, np.repeat(chs[-1:], r_p - r, axis=0)])
-            idx = np.concatenate([idx, np.repeat(idx[-1:], r_p - r)])
-
-        t0 = time.perf_counter()
-        res = prepared.enforce_many(doms, chs, idx)
-        doms_out = np.asarray(res.dom)
-        cons_out = np.asarray(res.consistent)
-        ks = np.asarray(res.n_recurrences)
-        dt = time.perf_counter() - t0
-
-        off = 0
-        next_pending: dict = {}
-        for i, b in zip(order, sizes):
-            rows = slice(off, off + b)
-            off += b
-            if collect_stats:
-                all_stats[i].enforce_seconds.append(dt * b / r_p)
-                counts[i].extend(int(k) for k in ks[rows])
-            try:
-                next_pending[i] = gens[i].send(_Reply(doms_out[rows], cons_out[rows]))
-            except StopIteration as stop:
-                sols[i] = stop.value
-            except BudgetExceeded:
-                sols[i] = None
-        pending = next_pending
-
+    while driver.has_work:
+        for i, (sol, _st) in driver.round().items():
+            sols[i] = sol
     return sols, all_stats
 
 

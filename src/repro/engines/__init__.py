@@ -15,24 +15,17 @@ Registered backends:
                   'model', domain batch on 'data')
     ac3           queue-based host baseline (paper §5.1); counts revisions
 
-Legacy string names ("rtac", "rtac_full") from the pre-Engine ``mac_solve``
-signature resolve with a DeprecationWarning for one release.
+The pre-Engine legacy names ("rtac", "rtac_full") were removed after their
+one deprecation release; use "einsum" / "full".
 """
 
 from __future__ import annotations
 
-import warnings
 from typing import Dict, List, Type
 
 from repro.core.engine import Engine, PreparedNetwork
 
 _REGISTRY: Dict[str, Type[Engine]] = {}
-
-# pre-Engine spelling -> registry key (kept one release; warns on use)
-DEPRECATED_ALIASES = {
-    "rtac": "einsum",
-    "rtac_full": "full",
-}
 
 
 def register(cls: Type[Engine]) -> Type[Engine]:
@@ -47,14 +40,6 @@ def available_engines() -> List[str]:
 
 def get_engine(name: str, **opts) -> Engine:
     """Instantiate a registered engine by name (``opts`` go to its __init__)."""
-    if name in DEPRECATED_ALIASES:
-        canonical = DEPRECATED_ALIASES[name]
-        warnings.warn(
-            f"engine name {name!r} is deprecated; use {canonical!r}",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        name = canonical
     if name not in _REGISTRY:
         raise ValueError(f"unknown engine {name!r}; available: {available_engines()}")
     return _REGISTRY[name](**opts)
@@ -79,7 +64,6 @@ __all__ = [
     "register",
     "get_engine",
     "available_engines",
-    "DEPRECATED_ALIASES",
     "EinsumEngine",
     "FullEngine",
     "PallasDenseEngine",

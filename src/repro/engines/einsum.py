@@ -7,9 +7,13 @@ support test for every (x, a) each step — kept as the fidelity baseline.
 
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import List
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import rtac
 from repro.core.csp import CSP
@@ -17,6 +21,7 @@ from repro.core.engine import (
     Engine,
     PreparedMany,
     PreparedNetwork,
+    SlotPool,
     as_changed,
     resolve_instance_idx,
 )
@@ -30,6 +35,55 @@ def _stack_networks(csps: List[CSP]):
         jnp.stack([c.cons for c in csps]),
         jnp.stack([c.mask for c in csps]),
     )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slot_write(stack, slot, value):
+    """In-place-ish slot update: with buffer donation XLA updates the resident
+    stack without a copy (TPU/GPU; CPU falls back to a copy and warns once)."""
+    return stack.at[slot].set(value)
+
+
+class _StackedSlotPool(SlotPool):
+    """Device-resident slot table for the vmappable engines: installs write
+    one network into the stacked (C, n, n, d, d) / (C, n, n) tensors, and
+    ``enforce_rows`` is ONE jitted gather+vmap fixpoint over the whole round —
+    the open-world analogue of `PreparedMany`'s stacked dispatch."""
+
+    stacked = True
+
+    def __init__(self, engine, n_vars, dom_size, capacity, dispatch):
+        super().__init__(engine, n_vars, dom_size, capacity)
+        self._round_dispatch = dispatch
+        n, d = n_vars, dom_size
+        self._cons = jnp.zeros((capacity, n, n, d, d), jnp.bool_)
+        self._mask = jnp.zeros((capacity, n, n), jnp.bool_)
+
+    def _prepare_slot(self, slot: int, csp: CSP):
+        with warnings.catch_warnings():
+            # CPU backends can't honour donation; the copy fallback is correct.
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            self._cons = _slot_write(self._cons, jnp.int32(slot), jnp.asarray(csp.cons))
+            self._mask = _slot_write(self._mask, jnp.int32(slot), jnp.asarray(csp.mask))
+        return True  # occupancy sentinel; the network lives in the stacks
+
+    def grow(self, capacity: int) -> None:
+        old = self.capacity
+        super().grow(capacity)
+        if capacity > old:
+            pad = [(0, capacity - old)] + [(0, 0)] * (self._cons.ndim - 1)
+            self._cons = jnp.pad(self._cons, pad)
+            self._mask = jnp.pad(self._mask, pad[:3])
+
+    def enforce_rows(self, doms, changed0=None, slot_idx=None):
+        doms = jnp.asarray(doms)
+        idx = resolve_instance_idx(slot_idx, self.capacity, doms.shape[0])
+        for j in np.unique(idx):
+            if self._nets[int(j)] is None:
+                raise ValueError(f"enforce_rows: slot {int(j)} is empty")
+        return self._round_dispatch(
+            (self._cons, self._mask), doms, as_changed(changed0), jnp.asarray(idx)
+        )
 
 
 def _revise_for(support_fn: SupportFn):
@@ -76,6 +130,14 @@ class EinsumEngine(Engine):
             revise_fn=self._revise_fn,
         )
 
+    def open_slot_pool(self, n_vars: int, dom_size: int, capacity: int) -> SlotPool:
+        def dispatch(networks, doms, changed0, idx):
+            return rtac.enforce_many_generic(
+                networks, doms, changed0, idx, revise_fn=self._revise_fn
+            )
+
+        return _StackedSlotPool(self, n_vars, dom_size, capacity, dispatch)
+
 
 @register
 class FullEngine(Engine):
@@ -109,3 +171,11 @@ class FullEngine(Engine):
         return rtac.enforce_full_many(
             cons, mask, doms, jnp.asarray(idx), support_fn=self.support_fn
         )
+
+    def open_slot_pool(self, n_vars: int, dom_size: int, capacity: int) -> SlotPool:
+        def dispatch(networks, doms, changed0, idx):
+            cons, mask = networks
+            del changed0  # the paper-faithful recurrence re-tests everything
+            return rtac.enforce_full_many(cons, mask, doms, idx, support_fn=self.support_fn)
+
+        return _StackedSlotPool(self, n_vars, dom_size, capacity, dispatch)

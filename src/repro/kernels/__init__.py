@@ -2,7 +2,7 @@
 
 rtac_support   dense uint8 fused support-count+clamp+AND-reduce (VPU streaming)
 bitpack_support  uint32 bitpacked variant (beyond paper: 16x less traffic)
-ops            jit'd wrappers + padding/packing + enforce_* entry points
+ops            jit'd wrappers + padding/packing + prepare_* network builders
 ref            pure-jnp oracles the kernels are validated against
 """
 

@@ -8,10 +8,11 @@ and bitpacks the padded tensors into the kernels' layouts:
 - revise_fn factories are ``lru_cache``-d on (shapes, blocks) so the returned
   function object is stable and keys `enforce_generic`'s jit cache correctly.
 - network preparation (padding + transpose + bitpack of the O(n²d²) constraint
-  tensor) is memoized per CSP identity, so repeated enforcement against the
-  same network — e.g. MAC search via the deprecated ``enforce_*_kernel``
-  entry points — pays it once. The Engine layer (`repro.engines.pallas`) calls
-  ``prepare_dense``/``prepare_packed`` once per CSP by construction.
+  tensor) is memoized per CSP identity, so repeated preparation of the same
+  network is free. The Engine layer (`repro.engines.pallas`) calls
+  ``prepare_dense``/``prepare_packed`` once per CSP by construction — the
+  deprecated one-shot ``enforce_*_kernel`` entry points are gone; go through
+  ``repro.engines.get_engine("pallas_dense" | "pallas_packed")``.
 
 On this CPU container the kernels run in ``interpret=True`` (Pallas executes
 the kernel body in Python); on a real TPU pass ``interpret=False``.
@@ -21,14 +22,13 @@ from __future__ import annotations
 
 import functools
 import weakref
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.csp import CSP
-from repro.core.engine import pad_changed, pad_dom, pad_network
-from repro.core.rtac import EnforceResult, enforce_generic
+from repro.core.engine import pad_dom, pad_network
 from . import bitpack_support, ref, rtac_support
 
 Array = jax.Array
@@ -99,26 +99,6 @@ def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
     return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p)
 
 
-def enforce_dense_kernel(
-    csp: CSP,
-    changed0: Optional[Array] = None,
-    block_rx: int = 8,
-    block_ry: int = 8,
-    interpret: bool = True,
-) -> EnforceResult:
-    """End-to-end RTAC with the dense Pallas revise.
-
-    .. deprecated:: prefer ``repro.engines.get_engine("pallas_dense")`` —
-       prepare once, enforce many. This shim stays correct (and caches the
-       prepared network) for one release.
-    """
-    network, dom_p, (n_p, d_p) = prepare_dense(csp, block_rx, block_ry)
-    n, d = csp.dom.shape
-    revise_fn = _dense_revise_fn(n_p, d_p, block_rx, block_ry, interpret)
-    res = enforce_generic(network, dom_p, pad_changed(changed0, n, n_p), revise_fn=revise_fn)
-    return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)
-
-
 # ---------------------------------------------------------------------------
 # Bitpacked uint32 kernel
 # ---------------------------------------------------------------------------
@@ -164,21 +144,3 @@ def prepare_packed(csp: CSP, block_rx: int = 8, block_ry: int = 8):
 
     network, (n_p, d_p, w) = _cached("packed", csp, block_rx, block_ry, build)
     return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p, w)
-
-
-def enforce_packed_kernel(
-    csp: CSP,
-    changed0: Optional[Array] = None,
-    block_rx: int = 8,
-    block_ry: int = 8,
-    interpret: bool = True,
-) -> EnforceResult:
-    """End-to-end RTAC with the bitpacked Pallas revise (8× less cons traffic).
-
-    .. deprecated:: prefer ``repro.engines.get_engine("pallas_packed")``.
-    """
-    network, dom_p, (n_p, d_p, w) = prepare_packed(csp, block_rx, block_ry)
-    n, d = csp.dom.shape
-    revise_fn = _packed_revise_fn(n_p, d_p, w, block_rx, block_ry, interpret)
-    res = enforce_generic(network, dom_p, pad_changed(changed0, n, n_p), revise_fn=revise_fn)
-    return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)

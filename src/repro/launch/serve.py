@@ -1,80 +1,133 @@
-"""Serving driver — batched autoregressive decode with a sharded KV/state cache.
+"""Serving driver — replay a seeded arrival trace through `SolverService`.
 
-Exercises the decode path end-to-end on real devices (same `build_decode_step`
-the dry-run lowers for decode_32k / long_500k):
+The service entry point (DESIGN.md §7): draws a Poisson arrival trace over
+the `repro.problems` registry, feeds it through the continuous-batching
+solver service against a fast-forward clock (idle gaps are skipped, queueing
+under load is real), and prints sustained throughput plus tail latency.
 
-    python -m repro.launch.serve --arch qwen1.5-0.5b --smoke --tokens 32
+    python -m repro.launch.serve --trace poisson \
+        --families model_rb,coloring_random --rate 8 --duration 20 --engine einsum
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.service import (
+    DEFAULT_VARIANTS,
+    FastForwardClock,
+    RequestStatus,
+    SolverService,
+    poisson_trace,
+    replay,
+)
 
-from repro.configs import get_config, smoke_config
-from repro.configs.base import ShapeSpec
-from repro.launch.mesh import make_mesh
-from repro.models.model import build_model
-from repro.parallel.sharding import make_ctx, sharding_ctx
+TRACES = ("poisson",)
 
 
 def serve(
-    arch: str,
-    smoke: bool = True,
-    batch: int = 4,
-    cache_len: int = 128,
-    tokens: int = 32,
-    mesh_shape=(1, 1),
+    families=("model_rb", "coloring_random"),
+    trace: str = "poisson",
+    rate: float = 8.0,
+    duration: float = 20.0,
+    engine: str = "einsum",
     seed: int = 0,
-    greedy: bool = True,
+    cache_mb: int = 256,
+    deadline_s: float = None,
+    max_assignments: int = None,
+    initial_slots: int = 8,
+    quiet: bool = False,
 ):
-    cfg = smoke_config(get_config(arch)) if smoke else get_config(arch)
-    mesh = make_mesh(mesh_shape, ("data", "model"))
-    ctx = make_ctx(mesh)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
-    cache = model.init_cache(batch=batch, cache_len=cache_len)
+    """Run one trace replay; returns (service, requests)."""
+    if trace not in TRACES:
+        raise ValueError(f"unknown trace {trace!r}; available: {list(TRACES)}")
+    events = poisson_trace(list(families), rate=rate, duration=duration, seed=seed)
+    clock = FastForwardClock()
+    svc = SolverService(
+        engine=engine,
+        cache_bytes=cache_mb << 20,
+        initial_slots=initial_slots,
+        clock=clock,
+    )
+    if not quiet:
+        print(
+            f"[serve] engine={engine} trace={trace} families={','.join(families)} "
+            f"rate={rate:g}/s duration={duration:g}s seed={seed} "
+            f"-> {len(events)} requests"
+        )
+    requests = replay(
+        svc, events, clock, deadline_s=deadline_s, max_assignments=max_assignments
+    )
 
-    def step(params, cache, toks):
-        with sharding_ctx(ctx):
-            return model.decode_step(params, cache, toks)
+    snap = svc.snapshot()
+    if not quiet:
+        n_to = snap["timed_out"]
+        print(
+            f"[serve] completed {snap['completed']}/{snap['submitted']}"
+            + (f" ({n_to} timed out)" if n_to else "")
+            + f" over {snap['span_s']:.2f}s of service time"
+        )
+        print(
+            f"[serve] throughput {snap['throughput_rps']:.2f} inst/s | "
+            f"latency p50 {snap['p50_ms']:.1f} ms  p95 {snap['p95_ms']:.1f} ms  "
+            f"p99 {snap['p99_ms']:.1f} ms"
+        )
+        cache = snap["cache"]
+        print(
+            f"[serve] {snap['rounds']} rounds, {snap['mean_rows_per_dispatch']:.1f} "
+            f"rows/dispatch | cache {cache['hits']} hits / {cache['misses']} misses "
+            f"/ {cache['evictions']} evictions | buckets "
+            + " ".join(
+                f"{b}:{info['capacity']}slots" for b, info in snap["buckets"].items()
+            )
+        )
+        n_solved = sum(r.solution is not None for r in requests)
+        n_capped = sum(
+            r.status is RequestStatus.DONE and r.solution is None
+            and r.stats is not None and r.stats.exhausted
+            for r in requests
+        )
+        n_unsat = sum(
+            r.status is RequestStatus.DONE and r.solution is None
+            and not (r.stats is not None and r.stats.exhausted)
+            for r in requests
+        )
+        print(
+            f"[serve] outcomes: {n_solved} SAT, {n_unsat} UNSAT"
+            + (f", {n_capped} budget-capped (inconclusive)" if n_capped else "")
+        )
+    return svc, requests
 
-    jit_step = jax.jit(step, donate_argnums=(1,))
 
-    rng = np.random.default_rng(seed)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(batch,)), jnp.int32)
-    out_tokens = [np.asarray(toks)]
-    # warmup / compile
-    logits, cache = jit_step(params, cache, toks)
-    t0 = time.perf_counter()
-    for _ in range(tokens - 1):
-        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32) if greedy else toks
-        logits, cache = jit_step(params, cache, toks)
-        out_tokens.append(np.asarray(toks))
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
-    seqs = np.stack(out_tokens, axis=1)
-    tput = batch * (tokens - 1) / dt
-    print(f"[serve] {cfg.name}: {tokens} steps, batch {batch}, "
-          f"{1e3 * dt / (tokens - 1):.1f} ms/step, {tput:.1f} tok/s")
-    return seqs, dt
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--tokens", type=int, default=32)
-    args = ap.parse_args()
-    seqs, dt = serve(args.arch, smoke=args.smoke, batch=args.batch,
-                     cache_len=args.cache_len, tokens=args.tokens)
-    print(f"[serve] sample tokens: {seqs[0][:16].tolist()}")
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="poisson", choices=TRACES)
+    ap.add_argument(
+        "--families",
+        default="model_rb,coloring_random",
+        help=f"comma-separated problem families (known: {sorted(DEFAULT_VARIANTS)})",
+    )
+    ap.add_argument("--rate", type=float, default=8.0, help="arrivals per second")
+    ap.add_argument("--duration", type=float, default=20.0, help="trace length (s)")
+    ap.add_argument("--engine", default="einsum")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-mb", type=int, default=256, help="prepared-network cache budget")
+    ap.add_argument("--deadline", type=float, default=None, help="per-request deadline (s)")
+    ap.add_argument("--budget", type=int, default=None, help="per-request assignment budget")
+    ap.add_argument("--slots", type=int, default=8, help="initial slots per bucket")
+    args = ap.parse_args(argv)
+    serve(
+        families=[f.strip() for f in args.families.split(",") if f.strip()],
+        trace=args.trace,
+        rate=args.rate,
+        duration=args.duration,
+        engine=args.engine,
+        seed=args.seed,
+        cache_mb=args.cache_mb,
+        deadline_s=args.deadline,
+        max_assignments=args.budget,
+        initial_slots=args.slots,
+    )
 
 
 if __name__ == "__main__":

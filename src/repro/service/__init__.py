@@ -1,0 +1,44 @@
+"""repro.service — continuous-batching solver service (DESIGN.md §7).
+
+    from repro.service import SolverService
+
+    svc = SolverService(engine="einsum")
+    req = svc.submit(csp, deadline_s=1.0)        # futures-style handle
+    solution, stats = req.result()               # drives the event loop
+
+Requests arriving over time are routed to shape buckets, their constraint
+networks deduplicated through a byte-budgeted prepared-network cache, and all
+live searches in a bucket advance through ONE lockstep dispatch per round —
+new admissions join mid-flight, finished searches free their rows mid-flight.
+`repro.launch.serve` replays seeded Poisson arrival traces against it.
+"""
+
+from .buckets import Bucket, bucket_for, pad_csp
+from .cache import CacheEntry, PreparedNetworkCache, network_fingerprint
+from .metrics import ServiceMetrics
+from .service import RequestStatus, SolveRequest, SolverService
+from .trace import (
+    DEFAULT_VARIANTS,
+    FastForwardClock,
+    TraceEvent,
+    poisson_trace,
+    replay,
+)
+
+__all__ = [
+    "Bucket",
+    "bucket_for",
+    "pad_csp",
+    "CacheEntry",
+    "PreparedNetworkCache",
+    "network_fingerprint",
+    "ServiceMetrics",
+    "RequestStatus",
+    "SolveRequest",
+    "SolverService",
+    "DEFAULT_VARIANTS",
+    "FastForwardClock",
+    "TraceEvent",
+    "poisson_trace",
+    "replay",
+]

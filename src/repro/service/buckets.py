@@ -1,0 +1,75 @@
+"""Shape-bucketed admission (DESIGN.md §7).
+
+jit compiles one program per shape, so a service facing heterogeneous requests
+must either force one global (worst-case) shape or compile per exact shape —
+both lose. Buckets split the difference: each request's ``(n_vars, dom_size)``
+is rounded up to the next power of two (with a small floor), the CSP is padded
+into that bucket under the §2 padding contract, and every request in a bucket
+shares the same jitted fixpoint, slot pool, and lockstep rounds. O(log n ·
+log d) distinct programs cover every shape.
+
+Padding preserves search semantics exactly: padded variables are unconstrained
+with singleton domain {0} (never change, never violate, never trip wipeout),
+padded values are absent everywhere, and `core.search._mac_coroutine` takes
+``n_active`` so padded variables are born assigned and never branched on — a
+padded search takes bit-identical decisions to the unpadded one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.csp import CSP
+from repro.core.engine import pad_dom
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One shared compilation shape: requests with n ≤ n_p, d ≤ d_p land here."""
+
+    n_p: int
+    d_p: int
+
+    def contains(self, n: int, d: int) -> bool:
+        return n <= self.n_p and d <= self.d_p
+
+    @property
+    def network_nbytes(self) -> int:
+        """Resident bytes of ONE prepared network in this bucket (bool cons
+        O(n_p²·d_p²) + bool mask O(n_p²)) — the cache's accounting unit."""
+        return self.n_p * self.n_p * self.d_p * self.d_p + self.n_p * self.n_p
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"({self.n_p}x{self.d_p})"
+
+
+def _round_up_pow2(x: int, floor: int) -> int:
+    x = max(x, floor)
+    return 1 << (x - 1).bit_length()
+
+
+def bucket_for(n: int, d: int, n_floor: int = 8, d_floor: int = 4) -> Bucket:
+    """The admission bucket for a request of shape (n, d): each axis rounds up
+    to the next power of two, floored so tiny requests coalesce. Idempotent on
+    its own output (``bucket_for(n_p, d_p) == Bucket(n_p, d_p)``)."""
+    if n < 1 or d < 1:
+        raise ValueError(f"bucket_for: need n, d >= 1, got ({n}, {d})")
+    return Bucket(_round_up_pow2(n, n_floor), _round_up_pow2(d, d_floor))
+
+
+def pad_csp(csp: CSP, bucket: Bucket) -> CSP:
+    """Pad a CSP into its bucket shape under the §2 contract. The AC closure
+    and the MAC search restricted to the original (n, d) slice are unchanged."""
+    n, d = csp.dom.shape
+    if not bucket.contains(n, d):
+        raise ValueError(f"csp shape ({n}, {d}) does not fit bucket {bucket}")
+    dn, dd = bucket.n_p - n, bucket.d_p - d
+    if dn == 0 and dd == 0:
+        return csp
+    return CSP(
+        cons=jnp.pad(csp.cons, ((0, dn), (0, dn), (0, dd), (0, dd))),
+        mask=jnp.pad(csp.mask, ((0, dn), (0, dn))),
+        dom=pad_dom(jnp.asarray(csp.dom), bucket.n_p, bucket.d_p),
+    )

@@ -1,0 +1,117 @@
+"""Service metrics: throughput, tail latency, queue depth, dispatch occupancy.
+
+Everything the ROADMAP's "serves heavy traffic" north star needs a number for:
+request latency percentiles (p50/p95/p99, submit → finish), sustained
+instances/second, queue depth over time, and rows-per-dispatch — the
+continuous-batching occupancy figure that says whether rounds actually ride
+full batches or the device is dispatching single rows.
+
+Memory is bounded for a long-lived service: totals (request counts, rows
+dispatched, span) are exact O(1) counters, while the per-sample series
+(latencies, queue depths, per-round rows/seconds) live in sliding windows of
+the most recent ``window`` samples — percentiles and means are therefore
+*recent-window* figures, which is what an operator watches anyway.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+
+def _mean(samples) -> float:
+    return float(np.mean(np.fromiter(samples, dtype=float))) if samples else 0.0
+
+
+class ServiceMetrics:
+    """Counters + sliding-window samples; ``snapshot`` reduces to one dict."""
+
+    def __init__(self, window: int = 100_000) -> None:
+        if window < 1:
+            raise ValueError("metrics window must be >= 1")
+        self.window = window
+        # exact totals
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_timed_out = 0
+        self.n_cancelled = 0
+        self.n_rounds = 0
+        self.rows_dispatched = 0
+        self.first_submit_t: Optional[float] = None
+        self.last_finish_t: Optional[float] = None
+        # bounded recent-window samples
+        self.latencies_s: Deque[float] = deque(maxlen=window)
+        self.queue_depths: Deque[int] = deque(maxlen=window)
+        self.round_rows: Deque[int] = deque(maxlen=window)
+        self.round_searches: Deque[int] = deque(maxlen=window)
+        self.round_seconds: Deque[float] = deque(maxlen=window)
+
+    # --- recording ----------------------------------------------------------
+
+    def record_submit(self, t: float) -> None:
+        self.n_submitted += 1
+        if self.first_submit_t is None:
+            self.first_submit_t = t
+
+    def record_finish(self, t: float, latency_s: float, status: str) -> None:
+        if status == "done":
+            self.n_completed += 1
+            self.latencies_s.append(latency_s)
+        elif status == "timed_out":
+            self.n_timed_out += 1
+        else:
+            self.n_cancelled += 1
+        self.last_finish_t = t
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.queue_depths.append(depth)
+
+    def record_round(self, rows: int, searches: int, seconds: float) -> None:
+        self.n_rounds += 1
+        self.rows_dispatched += rows
+        self.round_rows.append(rows)
+        self.round_searches.append(searches)
+        self.round_seconds.append(seconds)
+
+    # --- reduction ----------------------------------------------------------
+
+    def latency_ms(self, pct: float) -> float:
+        """Latency percentile over the recent window, in milliseconds."""
+        if not self.latencies_s:
+            return 0.0
+        return 1e3 * float(np.percentile(np.fromiter(self.latencies_s, float), pct))
+
+    @property
+    def span_s(self) -> float:
+        """First submit → last finish (the sustained-throughput denominator)."""
+        if self.first_submit_t is None or self.last_finish_t is None:
+            return 0.0
+        return max(self.last_finish_t - self.first_submit_t, 0.0)
+
+    @property
+    def throughput_rps(self) -> float:
+        span = self.span_s
+        return self.n_completed / span if span > 0 else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "submitted": self.n_submitted,
+            "completed": self.n_completed,
+            "timed_out": self.n_timed_out,
+            "cancelled": self.n_cancelled,
+            "span_s": round(self.span_s, 4),
+            "throughput_rps": round(self.throughput_rps, 3),
+            "p50_ms": round(self.latency_ms(50), 3),
+            "p95_ms": round(self.latency_ms(95), 3),
+            "p99_ms": round(self.latency_ms(99), 3),
+            "rounds": self.n_rounds,
+            "rows_dispatched": self.rows_dispatched,
+            "mean_rows_per_dispatch": round(
+                self.rows_dispatched / self.n_rounds if self.n_rounds else 0.0, 3
+            ),
+            "mean_searches_per_round": round(_mean(self.round_searches), 3),
+            "mean_queue_depth": round(_mean(self.queue_depths), 3),
+            "max_queue_depth": int(max(self.queue_depths, default=0)),
+        }

@@ -1,0 +1,334 @@
+"""SolverService — continuous-batching CSP solving over time (DESIGN.md §7).
+
+`solve_many` takes a *closed* batch: every instance known up front, one
+lockstep run to completion. A service faces an *open world* — requests arrive
+over time, finish at different times, and must not wait for a batch to drain.
+`SolverService` keeps the device saturated anyway:
+
+- **submit** returns a futures-style `SolveRequest` immediately; the CSP is
+  routed to its shape bucket (`buckets.bucket_for`) and queued;
+- **admission** pads the CSP into its bucket, fingerprints the constraint
+  network, and pins it in the prepared-network cache (`cache`) — a cache hit
+  reuses an already-resident slot, a miss installs into a free slot of the
+  bucket's `SlotPool` (growing by doubling when full);
+- **step** runs ONE lockstep round per bucket with work: newly admitted
+  searches' root propagations ride the same dispatch as everyone else's
+  frontiers, and searches that finish free their rows (and their cache pins)
+  mid-flight — continuous batching, one device dispatch per bucket round;
+- per-request **deadlines** (checked between rounds) and **assignment
+  budgets** bound work; `metrics.ServiceMetrics` tracks throughput, tail
+  latency, queue depth, and rows-per-dispatch occupancy.
+
+Single-threaded by design: ``step()`` is the event loop body, so tests and
+trace replay drive the service deterministically (``request.result()`` just
+steps until its request retires). Results and per-request `SearchStats` are
+bit-identical to sequential `mac_solve` on the unpadded CSP — asserted by
+`tests/test_service.py`.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from enum import Enum
+from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
+
+from repro.core.csp import CSP
+from repro.core.engine import Engine, SlotPool
+from repro.core.search import LockstepDriver, SearchStats, resolve_engine
+from .buckets import Bucket, bucket_for, pad_csp
+from .cache import CacheEntry, PreparedNetworkCache, network_fingerprint
+from .metrics import ServiceMetrics
+
+
+class RequestStatus(Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    TIMED_OUT = "timed_out"
+    CANCELLED = "cancelled"
+
+
+_TERMINAL = (RequestStatus.DONE, RequestStatus.TIMED_OUT, RequestStatus.CANCELLED)
+
+
+class SolveRequest:
+    """Futures-style handle for one submitted CSP."""
+
+    __slots__ = (
+        "id", "csp", "n_vars", "dom_size", "bucket", "fingerprint",
+        "deadline", "max_assignments", "status", "solution", "stats",
+        "submitted_at", "admitted_at", "finished_at", "_service",
+    )
+
+    def __init__(self, req_id: int, csp: CSP, bucket: Bucket, fingerprint: str,
+                 submitted_at: float, deadline: Optional[float],
+                 max_assignments: Optional[int], service: "SolverService"):
+        self.id = req_id
+        self.csp = csp
+        self.n_vars, self.dom_size = csp.dom.shape
+        self.bucket = bucket
+        self.fingerprint = fingerprint
+        self.submitted_at = submitted_at
+        self.deadline = deadline
+        self.max_assignments = max_assignments
+        self.status = RequestStatus.QUEUED
+        self.solution: Optional[List[int]] = None
+        self.stats: Optional[SearchStats] = None
+        self.admitted_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self._service = service
+
+    def done(self) -> bool:
+        return self.status in _TERMINAL
+
+    def result(self) -> Tuple[Optional[List[int]], Optional[SearchStats]]:
+        """(solution | None, stats). Drives the service's event loop until this
+        request retires (single-threaded future). ``(None, stats)`` is only a
+        proof of UNSAT when ``status is DONE`` and ``stats.exhausted`` is
+        False — a timed-out/cancelled request (check ``status``) or one that
+        hit its assignment budget (``stats.exhausted``) is inconclusive."""
+        while not self.done():
+            self._service.step()
+        return self.solution, self.stats
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"<SolveRequest #{self.id} {self.status.value} "
+                f"({self.n_vars}x{self.dom_size})->{self.bucket}>")
+
+
+class _BucketRuntime:
+    """One bucket's live state: slot pool, lockstep driver, slot free-list,
+    and the in-flight requests (with their cache pins)."""
+
+    def __init__(self, bucket: Bucket, pool: SlotPool, driver: LockstepDriver):
+        self.bucket = bucket
+        self.pool = pool
+        self.driver = driver
+        self.free_slots: List[int] = list(range(pool.capacity))
+        self.active: Dict[int, Tuple[SolveRequest, CacheEntry]] = {}
+
+    def take_slot(self) -> int:
+        if not self.free_slots:
+            old = self.pool.capacity
+            self.pool.grow(old * 2)
+            self.free_slots.extend(range(old, old * 2))
+        return self.free_slots.pop()
+
+
+class SolverService:
+    """Continuous-batching solver service over any registered Engine."""
+
+    def __init__(
+        self,
+        engine: Union[Engine, str] = "einsum",
+        *,
+        cache_bytes: int = 256 << 20,
+        initial_slots: int = 8,
+        max_active: Optional[int] = None,
+        batched_children: bool = True,
+        collect_stats: bool = True,
+        n_floor: int = 8,
+        d_floor: int = 4,
+        clock: Optional[Callable[[], float]] = None,
+        metrics_window: int = 100_000,
+    ):
+        self.engine = resolve_engine(engine)
+        if initial_slots < 1:
+            raise ValueError("initial_slots must be >= 1")
+        if max_active is not None and max_active < 1:
+            raise ValueError("max_active must be >= 1 (or None)")
+        self._initial_slots = initial_slots
+        self._max_active = max_active
+        self._batched_children = batched_children
+        self._collect_stats = collect_stats
+        self._n_floor = n_floor
+        self._d_floor = d_floor
+        self._clock = clock if clock is not None else time.monotonic
+        self._buckets: Dict[Bucket, _BucketRuntime] = {}
+        self._queue: Deque[SolveRequest] = deque()
+        self._ids = itertools.count()
+        self.cache = PreparedNetworkCache(cache_bytes, self._free_slot)
+        self.metrics = ServiceMetrics(window=metrics_window)
+
+    # --- submission ---------------------------------------------------------
+
+    def submit(
+        self,
+        csp: CSP,
+        *,
+        deadline_s: Optional[float] = None,
+        max_assignments: Optional[int] = None,
+    ) -> SolveRequest:
+        """Queue one CSP; returns immediately with a `SolveRequest` future.
+        ``deadline_s`` is relative to submission; an in-flight request whose
+        deadline passes is cancelled at the next round boundary."""
+        now = self._clock()
+        bucket = bucket_for(*csp.dom.shape, n_floor=self._n_floor, d_floor=self._d_floor)
+        req = SolveRequest(
+            next(self._ids), csp, bucket, network_fingerprint(csp),
+            submitted_at=now,
+            deadline=None if deadline_s is None else now + deadline_s,
+            max_assignments=max_assignments,
+            service=self,
+        )
+        self._queue.append(req)
+        self.metrics.record_submit(now)
+        return req
+
+    def cancel(self, req: SolveRequest) -> bool:
+        """Cancel a queued or running request; False if already terminal."""
+        if req.done():
+            return False
+        self._retire(req, None, RequestStatus.CANCELLED)
+        return True
+
+    # --- event loop ---------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(len(rt.active) for rt in self._buckets.values())
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(
+            rt.driver.has_work for rt in self._buckets.values()
+        )
+
+    def step(self) -> int:
+        """One event-loop beat: expire deadlines, admit from the queue, then
+        run ONE lockstep round per bucket with pending work. Returns the
+        number of requests that reached a terminal state."""
+        now = self._clock()
+        retired = self._expire(now)
+        self._admit()
+        for rt in list(self._buckets.values()):
+            if not rt.driver.has_work:
+                continue
+            rows = rt.driver.n_pending_rows
+            searches = len(rt.driver.active_keys)
+            t0 = time.perf_counter()
+            finished = rt.driver.round()
+            self.metrics.record_round(rows, searches, time.perf_counter() - t0)
+            for req_id, (sol, _stats) in finished.items():
+                req, _entry = rt.active[req_id]
+                self._retire(req, sol, RequestStatus.DONE)
+                retired += 1
+        self.metrics.record_queue_depth(len(self._queue))
+        return retired
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> None:
+        for _ in range(max_steps):
+            if not self.has_work:
+                return
+            self.step()
+        raise RuntimeError(f"service still busy after {max_steps} steps")
+
+    # --- internals ----------------------------------------------------------
+
+    def _runtime(self, bucket: Bucket) -> _BucketRuntime:
+        rt = self._buckets.get(bucket)
+        if rt is None:
+            pool = self.engine.open_slot_pool(bucket.n_p, bucket.d_p, self._initial_slots)
+            driver = LockstepDriver(
+                pool.enforce_rows,
+                bucket.n_p,
+                count_unit=self.engine.count_unit,
+                pad_rounds=pool.stacked,
+            )
+            rt = self._buckets[bucket] = _BucketRuntime(bucket, pool, driver)
+        return rt
+
+    def _free_slot(self, entry: CacheEntry) -> None:
+        """Cache eviction callback: return the slot to its bucket's free list."""
+        rt = self._buckets[entry.bucket]
+        rt.pool.release(entry.slot)
+        rt.free_slots.append(entry.slot)
+
+    def _admit(self) -> None:
+        while self._queue:
+            if self._max_active is not None and self.n_active >= self._max_active:
+                return
+            req = self._queue.popleft()
+            rt = self._runtime(req.bucket)
+            padded = pad_csp(req.csp, req.bucket)
+
+            def install() -> int:
+                slot = rt.take_slot()
+                rt.pool.install(slot, padded)
+                return slot
+
+            entry, _hit = self.cache.acquire(
+                req.bucket, req.fingerprint, req.bucket.network_nbytes, install
+            )
+            req.stats = rt.driver.admit(
+                req.id,
+                padded,
+                idx=entry.slot,
+                supports_batch=self.engine.supports_batch,
+                batched_children=self._batched_children,
+                n_active=req.n_vars,
+                max_assignments=req.max_assignments,
+                collect_stats=self._collect_stats,
+            )
+            rt.active[req.id] = (req, entry)
+            req.status = RequestStatus.RUNNING
+            req.admitted_at = self._clock()
+
+    def _expire(self, now: float) -> int:
+        """Retire queued/running requests whose deadline has passed."""
+        expired = [
+            req for req in self._queue
+            if req.deadline is not None and now >= req.deadline
+        ]
+        for rt in self._buckets.values():
+            expired.extend(
+                req for req, _e in rt.active.values()
+                if req.deadline is not None and now >= req.deadline
+            )
+        for req in expired:
+            self._retire(req, None, RequestStatus.TIMED_OUT)
+        return len(expired)
+
+    def _retire(self, req: SolveRequest, solution, status: RequestStatus) -> None:
+        if req.status is RequestStatus.QUEUED:
+            self._queue.remove(req)
+        elif req.status is RequestStatus.RUNNING:
+            rt = self._buckets[req.bucket]
+            _req, entry = rt.active.pop(req.id)
+            if rt.driver.is_active(req.id):  # still mid-flight (deadline/cancel)
+                rt.driver.cancel(req.id)
+            self.cache.release(entry)
+        req.solution = solution
+        req.status = status
+        req.finished_at = self._clock()
+        self.metrics.record_finish(
+            req.finished_at, req.finished_at - req.submitted_at, status.value
+        )
+
+    # --- introspection ------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Service-wide metrics + cache + per-bucket occupancy (JSON-ready)."""
+        snap = self.metrics.snapshot()
+        snap["cache"] = self.cache.stats()
+        snap["buckets"] = {
+            str(b): {
+                "capacity": rt.pool.capacity,
+                "free_slots": len(rt.free_slots),
+                "active": len(rt.active),
+            }
+            for b, rt in sorted(self._buckets.items())
+        }
+        return snap

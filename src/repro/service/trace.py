@@ -1,0 +1,134 @@
+"""Arrival traces: seeded workloads that hit the service *over time*.
+
+`poisson_trace` draws a reproducible Poisson process (exponential
+inter-arrivals at ``rate`` requests/second) over the `repro.problems`
+registry: each event picks a family and a size variant, so a replay exercises
+shape-bucketed admission with genuinely heterogeneous requests. Instance i is
+seeded ``(seed, i)`` — the trace is deterministic and events are stable under
+rate/duration changes of later events.
+
+`replay` feeds a trace through a `SolverService` against a `FastForwardClock`:
+arrivals are admitted when the service clock reaches their timestamp; while
+requests are in flight the clock advances at wall speed (queueing delay is
+real compute), and when the service goes idle the clock jumps to the next
+arrival — a 20-second trace replays in however long the solving actually
+takes, never sleeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.csp import CSP
+from repro.problems import generate
+from .service import SolveRequest, SolverService
+
+#: per-family size variants, deliberately CPU-small and shape-diverse so a
+#: default trace spans several admission buckets
+DEFAULT_VARIANTS: Dict[str, List[dict]] = {
+    "model_rb": [
+        {"n": 8, "hardness": 0.9},
+        {"n": 10, "hardness": 1.0},
+        {"n": 12, "hardness": 0.9},
+    ],
+    "coloring_random": [
+        {"n": 12, "edge_prob": 0.25, "k": 3},
+        {"n": 16, "edge_prob": 0.2, "k": 3},
+    ],
+    "random_binary": [
+        {"n": 10, "d": 5, "density": 0.4, "tightness": 0.35},
+    ],
+    "coloring_kneser": [{"m": 5, "j": 2, "excess": 0}],
+    "nqueens": [{"n": 8}, {"n": 10}],
+    "pigeonhole": [{"n": 5}],
+    "sudoku": [{"givens": 40}],
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One arrival: at time ``t``, submit family instance ``seed`` with knobs."""
+
+    t: float
+    family: str
+    knobs: dict
+    seed: tuple
+
+    def build(self) -> CSP:
+        return generate(self.family, seed=self.seed, **self.knobs)
+
+
+def poisson_trace(
+    families: Sequence[str],
+    rate: float,
+    duration: float,
+    seed: int = 0,
+    variants: Optional[Dict[str, List[dict]]] = None,
+) -> List[TraceEvent]:
+    """A seeded Poisson arrival process over the given problem families."""
+    if rate <= 0 or duration <= 0:
+        raise ValueError("poisson_trace needs rate > 0 and duration > 0")
+    unknown = [f for f in families if f not in (variants or DEFAULT_VARIANTS)]
+    if unknown:
+        raise ValueError(
+            f"no size variants for families {unknown}; "
+            f"known: {sorted((variants or DEFAULT_VARIANTS))}"
+        )
+    vmap = variants or DEFAULT_VARIANTS
+    rng = np.random.default_rng(seed)
+    events: List[TraceEvent] = []
+    t = 0.0
+    for i in range(10**9):  # bounded by duration, not by count
+        t += float(rng.exponential(1.0 / rate))
+        if t >= duration:
+            break
+        family = families[int(rng.integers(len(families)))]
+        knobs = vmap[family][int(rng.integers(len(vmap[family])))]
+        events.append(TraceEvent(t=t, family=family, knobs=dict(knobs), seed=(seed, i)))
+    return events
+
+
+class FastForwardClock:
+    """Monotonic clock that advances at wall speed but can jump forward over
+    idle gaps — trace replays complete as fast as the compute allows while
+    queueing delay under load stays real."""
+
+    def __init__(self) -> None:
+        self._t0 = time.perf_counter()
+        self._offset = 0.0
+
+    def __call__(self) -> float:
+        return time.perf_counter() - self._t0 + self._offset
+
+    def advance_to(self, t: float) -> None:
+        now = self()
+        if t > now:
+            self._offset += t - now
+
+
+def replay(
+    service: SolverService,
+    events: Sequence[TraceEvent],
+    clock: FastForwardClock,
+    **submit_kwargs,
+) -> List[SolveRequest]:
+    """Feed ``events`` through ``service`` (which must share ``clock``) and
+    drive it to completion. ``submit_kwargs`` (deadline_s, max_assignments)
+    apply to every request. Returns the requests in arrival order."""
+    events = sorted(events, key=lambda e: e.t)
+    requests: List[SolveRequest] = []
+    i = 0
+    while i < len(events) or service.has_work:
+        now = clock()
+        while i < len(events) and events[i].t <= now:
+            requests.append(service.submit(events[i].build(), **submit_kwargs))
+            i += 1
+        if service.has_work:
+            service.step()
+        elif i < len(events):
+            clock.advance_to(events[i].t)
+    return requests

@@ -13,7 +13,7 @@ import pytest
 
 from repro.core import CSPBenchSpec, PAPER_GRID, Engine, mac_solve, nqueens_csp, random_csp
 from repro.core.engine import PreparedNetwork
-from repro.engines import DEPRECATED_ALIASES, available_engines, get_engine
+from repro.engines import available_engines, get_engine
 from repro.kernels import ops
 
 ENGINES = available_engines()
@@ -101,10 +101,9 @@ def test_batch_matches_looped_enforce(engine):
 
 def test_registry_contents():
     assert set(ENGINES) >= {"einsum", "full", "pallas_dense", "pallas_packed", "sharded", "ac3"}
-    for legacy, canonical in DEPRECATED_ALIASES.items():
-        with pytest.warns(DeprecationWarning):
-            eng = get_engine(legacy)
-        assert eng.name == canonical
+    for legacy in ("rtac", "rtac_full"):  # removed after the deprecation release
+        with pytest.raises(ValueError, match="unknown engine"):
+            get_engine(legacy)
 
 
 def test_unknown_engine_raises():

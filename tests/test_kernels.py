@@ -11,6 +11,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import enforce, random_csp
+from repro.engines import get_engine
 from repro.kernels import ops
 from repro.kernels.ref import (
     pack_bits_ref,
@@ -97,8 +98,8 @@ def test_pack_bits_roundtrip_values():
 def test_end_to_end_kernel_enforcement(n, d, dens, tight, seed):
     csp = random_csp(n, d, dens, tight, seed)
     ref = enforce(csp.cons, csp.mask, csp.dom)
-    for fn in (ops.enforce_dense_kernel, ops.enforce_packed_kernel):
-        got = fn(csp)
+    for engine in ("pallas_dense", "pallas_packed"):
+        got = get_engine(engine).prepare(csp).enforce()
         assert bool(got.consistent) == bool(ref.consistent)
         assert int(got.n_recurrences) == int(ref.n_recurrences)
         if bool(ref.consistent):

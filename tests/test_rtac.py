@@ -16,7 +16,6 @@ from repro.core import (
     enforce,
     enforce_ac3,
     enforce_batch,
-    enforce_csp,
     enforce_full,
     nqueens_csp,
     random_csp,
@@ -127,6 +126,6 @@ def test_recurrence_count_matches_paper_band():
     ks = []
     for seed in range(5):
         csp = random_csp(100, 20, 0.5, 0.3, seed)
-        r = enforce_csp(csp)
+        r = enforce(csp.cons, csp.mask, csp.dom)
         ks.append(int(r.n_recurrences))
     assert max(ks) <= 8, ks  # generous band; exact stats in benchmarks

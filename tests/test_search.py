@@ -28,12 +28,12 @@ def test_nqueens_unbatched_children():
     assert sol is not None and check_solution(csp, sol)
 
 
-def test_legacy_engine_names_warn_and_work():
+def test_legacy_engine_names_removed():
+    """The pre-Engine names were deleted after their deprecation release."""
     csp = nqueens_csp(6)
     for legacy in ("rtac", "rtac_full"):
-        with pytest.warns(DeprecationWarning):
-            sol, _ = mac_solve(csp, engine=legacy)
-        assert sol is not None and check_solution(csp, sol)
+        with pytest.raises(ValueError, match="unknown engine"):
+            mac_solve(csp, engine=legacy)
 
 
 def test_nqueens_unsat():

@@ -1,0 +1,265 @@
+"""Service layer: continuous batching ≡ sequential `mac_solve`, prepared-
+network cache safety (no in-flight eviction), and shape-bucket routing.
+
+The load-bearing claim (ISSUE 3 acceptance): a `SolverService` fed requests
+*over time* — staggered admission, mixed families, mixed shapes, searches
+joining and leaving rounds mid-flight — returns solutions AND per-instance
+search statistics bit-identical to running `mac_solve` on each CSP alone.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import check_solution, mac_solve
+from repro.problems import generate, generate_batch
+from repro.service import (
+    Bucket,
+    FastForwardClock,
+    PreparedNetworkCache,
+    RequestStatus,
+    SolverService,
+    bucket_for,
+    network_fingerprint,
+    pad_csp,
+    poisson_trace,
+    replay,
+)
+
+
+def _assert_matches_sequential(req, csp, engine="einsum", **kw):
+    ref_sol, ref_st = mac_solve(csp, engine=engine, **kw)
+    assert req.status is RequestStatus.DONE
+    assert req.solution == ref_sol
+    assert req.stats.n_assignments == ref_st.n_assignments
+    assert req.stats.n_backtracks == ref_st.n_backtracks
+    assert req.stats.recurrences == ref_st.recurrences
+    assert req.stats.revisions == ref_st.revisions
+
+
+# --- continuous-batching parity (acceptance criterion) -----------------------
+
+
+def test_staggered_admission_matches_sequential_mixed_families():
+    """Requests arriving mid-flight across two buckets: results and stats are
+    bit-identical to sequential mac_solve on every instance."""
+    rb = generate_batch("model_rb", 6, n=10, hardness=1.0, seed=5)
+    col = generate_batch("coloring_random", 4, n=12, edge_prob=0.3, k=3, seed=1)
+    svc = SolverService(engine="einsum", initial_slots=2)
+
+    reqs = [svc.submit(c) for c in rb[:3]]
+    svc.step()
+    svc.step()  # first wave is mid-search when the second wave arrives
+    reqs += [svc.submit(c) for c in rb[3:] + col]
+    svc.run_until_idle()
+
+    outcomes = set()
+    for req, csp in zip(reqs, rb + col):
+        _assert_matches_sequential(req, csp)
+        if req.solution is not None:
+            assert check_solution(csp, req.solution)
+        outcomes.add(req.solution is not None)
+    assert outcomes == {True, False}  # the mix straddles SAT and UNSAT
+
+
+def test_single_request_future_api():
+    csp = generate("nqueens", n=8)
+    svc = SolverService(engine="einsum")
+    req = svc.submit(csp)
+    assert not req.done()
+    sol, stats = req.result()  # drives the event loop
+    assert req.done() and req.status is RequestStatus.DONE
+    _assert_matches_sequential(req, csp)
+    assert req.latency_s is not None and req.latency_s >= 0
+    assert sol is not None and check_solution(csp, sol)
+    assert stats is req.stats
+
+
+def test_sequential_engine_service_parity():
+    """AC3 (supports_batch=False) rides the generic host-routing slot pool and
+    still matches its own sequential mac_solve exactly."""
+    csps = generate_batch("model_rb", 3, n=10, hardness=1.0, seed=5)
+    svc = SolverService(engine="ac3")
+    reqs = [svc.submit(c) for c in csps]
+    svc.run_until_idle()
+    for req, csp in zip(reqs, csps):
+        _assert_matches_sequential(req, csp, engine="ac3")
+
+
+def test_per_request_assignment_budget():
+    csp = generate("pigeonhole", n=7)  # hard UNSAT: the budget must bite
+    svc = SolverService(engine="einsum")
+    req = svc.submit(csp, max_assignments=5)
+    sol, stats = req.result()
+    assert sol is None
+    assert stats.exhausted  # budget-capped is inconclusive, NOT a proof of UNSAT
+    ref_sol, ref_st = mac_solve(csp, engine="einsum", max_assignments=5)
+    assert ref_sol is None and ref_st.exhausted
+    assert stats.n_assignments == ref_st.n_assignments
+
+
+def test_unsat_without_budget_is_not_exhausted():
+    sol, stats = mac_solve(generate("pigeonhole", n=5), engine="einsum")
+    assert sol is None and not stats.exhausted  # genuine UNSAT proof
+
+
+def test_deadline_expires_only_the_late_request():
+    clock = FastForwardClock()
+    svc = SolverService(engine="einsum", clock=clock)
+    hard = svc.submit(generate("pigeonhole", n=8), deadline_s=0.0)  # due instantly
+    easy = svc.submit(generate("nqueens", n=8))
+    svc.run_until_idle()
+    assert hard.status is RequestStatus.TIMED_OUT and hard.solution is None
+    assert easy.status is RequestStatus.DONE
+    _assert_matches_sequential(easy, generate("nqueens", n=8))
+
+
+def test_cancel_frees_cache_pin():
+    svc = SolverService(engine="einsum")
+    req = svc.submit(generate("pigeonhole", n=8))
+    svc.step()  # admitted + pinned
+    entry = svc.cache.lookup(req.bucket, req.fingerprint)
+    assert entry is not None and entry.pins == 1
+    assert svc.cancel(req) and req.status is RequestStatus.CANCELLED
+    assert entry.pins == 0
+    assert not svc.cancel(req)  # already terminal
+    svc.run_until_idle()
+
+
+def test_trace_replay_completes_and_measures():
+    events = poisson_trace(["model_rb", "coloring_random"], rate=10.0,
+                           duration=1.5, seed=0)
+    assert events and all(e.t < 1.5 for e in events)
+    clock = FastForwardClock()
+    svc = SolverService(engine="einsum", clock=clock)
+    requests = replay(svc, events, clock)
+    assert len(requests) == len(events)
+    assert all(r.status is RequestStatus.DONE for r in requests)
+    snap = svc.snapshot()
+    assert snap["completed"] == len(events)
+    assert snap["throughput_rps"] > 0
+    assert 0 <= snap["p50_ms"] <= snap["p95_ms"] <= snap["p99_ms"]
+    assert snap["mean_rows_per_dispatch"] >= 1.0
+
+
+# --- prepared-network cache --------------------------------------------------
+
+
+def test_cache_hit_shares_resident_slot():
+    csp = generate("nqueens", n=8)  # deterministic: same network every time
+    svc = SolverService(engine="einsum")
+    r1 = svc.submit(csp)
+    r2 = svc.submit(csp)
+    svc.step()
+    entry = svc.cache.lookup(r1.bucket, r1.fingerprint)
+    assert entry is not None and entry.pins == 2  # both flights share one slot
+    svc.run_until_idle()
+    assert svc.cache.hits == 1 and svc.cache.misses == 1
+    assert entry.pins == 0  # warm but unpinned after both retire
+    _assert_matches_sequential(r1, csp)
+    _assert_matches_sequential(r2, csp)
+
+
+def test_cache_eviction_never_evicts_inflight_network():
+    """Byte budget of ~2 networks under 4 concurrent distinct networks: the
+    cache must run over budget rather than evict anything pinned."""
+    # under-constrained (SAT side): no root wipeout, so all four searches
+    # are still in flight after the first round
+    csps = generate_batch("model_rb", 4, n=10, hardness=0.8, seed=5)
+    bucket = bucket_for(10, csps[0].dom.shape[1])
+    svc = SolverService(
+        engine="einsum", cache_bytes=2 * bucket.network_nbytes + 1
+    )
+    reqs = [svc.submit(c) for c in csps]
+    svc.step()  # all four admitted concurrently, all pinned
+    entries = [svc.cache.lookup(r.bucket, r.fingerprint) for r in reqs]
+    assert all(e is not None and e.pins == 1 for e in entries)
+    assert svc.cache.evictions == 0  # over budget, but everything is in flight
+    assert svc.cache.bytes_in_use > svc.cache.byte_budget
+    svc.run_until_idle()
+    for req, csp in zip(reqs, csps):
+        _assert_matches_sequential(req, csp)
+
+    # once unpinned, a new distinct admission DOES evict LRU entries
+    more = generate_batch("model_rb", 2, n=10, hardness=0.8, seed=77)
+    extra = [svc.submit(c) for c in more]
+    svc.run_until_idle()
+    assert svc.cache.evictions > 0
+    assert svc.cache.lookup(reqs[0].bucket, reqs[0].fingerprint) is None  # LRU gone
+    for req, csp in zip(extra, more):
+        _assert_matches_sequential(req, csp)
+
+
+def test_evicted_slot_is_reused():
+    cache_calls = []
+    cache = PreparedNetworkCache(100, on_evict=lambda e: cache_calls.append(e.slot))
+    e1, hit = cache.acquire(Bucket(8, 4), "fp1", 60, lambda: 0)
+    assert not hit and e1.pins == 1
+    cache.release(e1)
+    e2, hit = cache.acquire(Bucket(8, 4), "fp2", 60, lambda: 1)  # evicts fp1
+    assert not hit and cache_calls == [0]
+    assert cache.lookup(Bucket(8, 4), "fp1") is None
+    e1b, hit = cache.acquire(Bucket(8, 4), "fp1", 60, lambda: 0)  # rebuilt
+    assert not hit
+    with pytest.raises(ValueError, match="without pin"):
+        cache.release(e1)
+
+
+def test_fingerprint_separates_network_from_domain():
+    csp = generate("model_rb", n=10, seed=3)
+    # different domain, same constraint network -> same fingerprint
+    narrowed = csp._replace(dom=csp.dom.at[0, 1:].set(False))
+    assert network_fingerprint(csp) == network_fingerprint(narrowed)
+    other = generate("model_rb", n=10, seed=4)
+    assert network_fingerprint(csp) != network_fingerprint(other)
+
+
+# --- shape buckets -----------------------------------------------------------
+
+
+def test_bucket_routing_round_trips_shapes():
+    for n, d in [(3, 2), (8, 4), (9, 5), (16, 8), (17, 9), (100, 20)]:
+        b = bucket_for(n, d)
+        assert b.contains(n, d)
+        assert b.n_p >= n and b.d_p >= d
+        # idempotent: a bucket shape maps to itself
+        assert bucket_for(b.n_p, b.d_p) == Bucket(b.n_p, b.d_p)
+        # powers of two (with the floor), so bucket count stays O(log² shape)
+        assert b.n_p & (b.n_p - 1) == 0 and b.d_p & (b.d_p - 1) == 0
+
+
+def test_pad_csp_preserves_search_semantics():
+    csp = generate("model_rb", n=10, hardness=1.0, seed=2)
+    b = bucket_for(*csp.dom.shape)
+    padded = pad_csp(csp, b)
+    assert padded.dom.shape == (b.n_p, b.d_p)
+    n, d = csp.dom.shape
+    pd = np.asarray(padded.dom)
+    assert not pd[:n, d:].any()  # padded values absent from real domains
+    assert (pd[n:, 0] == True).all() and not pd[n:, 1:].any()  # noqa: E712
+    assert not np.asarray(padded.mask)[n:, :].any()  # padded vars unconstrained
+    with pytest.raises(ValueError, match="does not fit"):
+        pad_csp(csp, Bucket(4, 4))
+
+
+def test_requests_route_to_distinct_buckets():
+    svc = SolverService(engine="einsum")
+    small = svc.submit(generate("model_rb", n=8, seed=0))
+    big = svc.submit(generate("random_binary", n=20, d=10, density=0.3,
+                              tightness=0.3, seed=0))
+    assert small.bucket != big.bucket
+    svc.run_until_idle()
+    snap = svc.snapshot()
+    assert len(snap["buckets"]) == 2
+    for req in (small, big):
+        assert req.status is RequestStatus.DONE
+
+
+def test_slot_pool_grows_beyond_initial_capacity():
+    csps = generate_batch("model_rb", 5, n=10, hardness=0.8, seed=9)
+    svc = SolverService(engine="einsum", initial_slots=1)
+    reqs = [svc.submit(c) for c in csps]
+    svc.run_until_idle()
+    for req, csp in zip(reqs, csps):
+        _assert_matches_sequential(req, csp)
+    (bucket_info,) = svc.snapshot()["buckets"].values()
+    assert bucket_info["capacity"] >= 5
