@@ -20,9 +20,13 @@ from repro.problems import generate_batch
 from . import tracker
 from .tracker import OUT_PATH
 
+#: (family, knobs, count, engine). The pallas_packed workload is small (the
+#: stacked kernel runs interpret-mode on CPU); it gates that the packed
+#: enforce_many path keeps working at speed, not an absolute throughput.
 WORKLOADS = [
-    ("model_rb", {"n": 12, "hardness": 1.0}, 32),
-    ("coloring_random", {"n": 16, "edge_prob": 0.25, "k": 3}, 32),
+    ("model_rb", {"n": 12, "hardness": 1.0}, 32, "einsum"),
+    ("coloring_random", {"n": 16, "edge_prob": 0.25, "k": 3}, 32, "einsum"),
+    ("model_rb", {"n": 10, "hardness": 1.0}, 6, "pallas_packed"),
 ]
 
 
@@ -55,8 +59,11 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
     }
 
 
-def main(engine: str = "einsum", out_path: Path = OUT_PATH) -> list:
-    rows = [bench_workload(f, knobs, count, engine=engine) for f, knobs, count in WORKLOADS]
+def main(out_path: Path = OUT_PATH) -> list:
+    rows = [
+        bench_workload(f, knobs, count, engine=engine)
+        for f, knobs, count, engine in WORKLOADS
+    ]
     for r in rows:
         print(
             f"many,{r['engine']},{r['family']},{r['count']},"

@@ -18,13 +18,17 @@ from repro.service import FastForwardClock, SolverService, poisson_trace, replay
 from . import tracker
 from .tracker import OUT_PATH
 
-#: (label, families, rate/s, duration s) — fixed seeds so runs are comparable
+#: (engine, label, families, rate/s, duration s) — fixed seeds so runs are
+#: comparable. The pallas_packed replay exercises the device-resident packed
+#: slot table end-to-end (stacked kernels run interpret-mode on CPU, so its
+#: trace is deliberately small — the gated quantity is the trajectory, not the
+#: absolute number).
 TRACES = [
-    ("poisson_mixed_r12_d4", ["model_rb", "coloring_random"], 12.0, 4.0),
+    ("einsum", "poisson_mixed_r12_d4", ["model_rb", "coloring_random"], 12.0, 4.0),
+    ("pallas_packed", "poisson_packed_r6_d2", ["model_rb"], 6.0, 2.0),
 ]
-FULL_TRACES = [
-    ("poisson_mixed_r12_d4", ["model_rb", "coloring_random"], 12.0, 4.0),
-    ("poisson_mixed_r8_d20", ["model_rb", "coloring_random"], 8.0, 20.0),
+FULL_TRACES = TRACES + [
+    ("einsum", "poisson_mixed_r8_d20", ["model_rb", "coloring_random"], 8.0, 20.0),
 ]
 
 
@@ -57,10 +61,10 @@ def bench_trace(label: str, families, rate: float, duration: float,
     }
 
 
-def main(engine: str = "einsum", quick: bool = True, out_path: Path = OUT_PATH) -> list:
+def main(quick: bool = True, out_path: Path = OUT_PATH) -> list:
     rows = [
         bench_trace(label, fams, rate, dur, engine=engine)
-        for label, fams, rate, dur in (TRACES if quick else FULL_TRACES)
+        for engine, label, fams, rate, dur in (TRACES if quick else FULL_TRACES)
     ]
     for r in rows:
         print(

@@ -11,10 +11,16 @@ cell present in the baseline but missing from the fresh run fails the check,
 new cells are reported but pass (the baseline is regenerated in the same PR
 that adds them).
 
-The "service" section (bench_service trace replays) is gated the same way:
-p95 latency may not regress ``> tolerance``× and sustained throughput may not
-drop ``> tolerance``×, matched by (engine, trace). Exit code 0 = ok,
-1 = regression/mismatch.
+A whole SECTION present (non-empty) in the baseline but absent from the fresh
+run is a hard failure, not a silent pass — a benchmark that stops writing its
+section must not look like zero regressions.
+
+The "many" section (solve_many workload throughput) is gated on
+``many_instances_per_s``: a ``> tolerance``× throughput drop fails, matched by
+(engine, family). The "service" section (bench_service trace replays) is
+gated the same way: p95 latency may not regress ``> tolerance``× and
+sustained throughput may not drop ``> tolerance``×, matched by
+(engine, trace). Exit code 0 = ok, 1 = regression/mismatch.
 """
 
 from __future__ import annotations
@@ -23,6 +29,8 @@ import argparse
 import json
 import sys
 from pathlib import Path
+
+from .tracker import GATED_SECTIONS as SECTIONS  # single owner of the list
 
 METRIC = "enforce_ms_median"
 
@@ -45,6 +53,12 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
             f"schema mismatch: baseline {baseline.get('schema')!r} vs fresh "
             f"{fresh.get('schema')!r} — regenerate the committed BENCH_engines.json"
         ]
+    for sec in SECTIONS:
+        if baseline.get(sec) and not fresh.get(sec):
+            failures.append(
+                f"section {sec!r} present in baseline but missing from fresh run "
+                "— its benchmark stopped recording"
+            )
     base_cells, fresh_cells = index_cells(baseline), index_cells(fresh)
     for key in sorted(base_cells):
         engine, label = key
@@ -62,7 +76,41 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
             failures.append(f"{engine} {label}: {METRIC} {b} -> {f} ({ratio:.2f}x > {tolerance}x)")
     for key in sorted(set(fresh_cells) - set(base_cells)):
         print(f"new  {key[0]:14s} {key[1]:34s} (no baseline — passes)")
+    failures.extend(compare_many(baseline, fresh, tolerance))
     failures.extend(compare_service(baseline, fresh, tolerance))
+    return failures
+
+
+def index_many(report: dict) -> dict:
+    return {(r["engine"], r["family"]): r for r in report.get("many", [])}
+
+
+def compare_many(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Gate the many section: solve_many throughput (instances/second) may not
+    drop more than ``tolerance``×. Same missing/new-row policy as the cells."""
+    failures = []
+    base_rows, fresh_rows = index_many(baseline), index_many(fresh)
+    eps = 1e-3
+    for key in sorted(base_rows):
+        engine, family = key
+        if key not in fresh_rows:
+            failures.append(f"many {engine} {family}: row missing from fresh run")
+            continue
+        b = base_rows[key]["many_instances_per_s"]
+        f = fresh_rows[key]["many_instances_per_s"]
+        ratio = (b + eps) / (f + eps)  # throughput DROP factor
+        status = "FAIL" if ratio > tolerance else "ok"
+        print(
+            f"{status:4s} many:{engine:10s} {family:34s} "
+            f"{b:8.3f} -> {f:8.3f} inst/s ({1 / max(ratio, eps):.2f}x)"
+        )
+        if ratio > tolerance:
+            failures.append(
+                f"many {engine} {family}: many_instances_per_s {b} -> {f} "
+                f"({ratio:.2f}x drop > {tolerance}x)"
+            )
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"new  many:{key[0]:10s} {key[1]:34s} (no baseline — passes)")
     return failures
 
 

@@ -33,7 +33,9 @@ This module is the only place that implements that contract.
 from __future__ import annotations
 
 import abc
-from typing import Any, ClassVar, List, Optional, Sequence, Union
+import functools
+import warnings
+from typing import Any, Callable, ClassVar, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +57,14 @@ def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def padded_shape(n: int, d: int, n_block: int, d_mult: int):
+    """The kernel-tile shape `pad_network` pads (n, d) to. The ONE place the
+    formula lives — engines that size slot tables without a CSP in hand
+    (`_open_stacked_slot_pool`) must agree with `pad_network` by construction,
+    not by convention."""
+    return round_up(max(n, n_block), n_block), round_up(d, d_mult)
+
+
 def pad_network(csp: CSP, n_block: int, d_mult: int):
     """Pad the *network* (cons, mask) to kernel tiles.
 
@@ -62,8 +72,7 @@ def pad_network(csp: CSP, n_block: int, d_mult: int):
     (mask False, cons zero blocks) so they never produce a violation.
     """
     n, d = csp.dom.shape
-    n_p = round_up(max(n, n_block), n_block)
-    d_p = round_up(d, d_mult)
+    n_p, d_p = padded_shape(n, d, n_block, d_mult)
     cons = jnp.pad(csp.cons, ((0, n_p - n), (0, n_p - n), (0, d_p - d), (0, d_p - d)))
     mask = jnp.pad(csp.mask, ((0, n_p - n), (0, n_p - n)))
     return cons, mask, n_p, d_p
@@ -208,9 +217,10 @@ class SlotPool:
     bucket shape, so every round reuses the same jitted program.
 
     This generic implementation keeps one `PreparedNetwork` per slot and
-    routes rows on the host (works for every engine, including AC3). Stacked
-    engines override `Engine.open_slot_pool` with a device-resident slot table
-    and a single gather+vmap dispatch (`repro.engines.einsum`).
+    routes rows on the host (works for every engine, including AC3). Engines
+    that advertise ``slot_table = True`` get a device-resident `StackedSlotPool`
+    instead — stacked tables, donated slot installs, one gather+fixpoint
+    dispatch per round (`repro.engines.einsum`, `repro.engines.pallas`).
     """
 
     stacked: ClassVar[bool] = False
@@ -273,6 +283,95 @@ class SlotPool:
 
         return route_rows_on_host(enforce_row, doms, changed0, idx)
 
+    @property
+    def resident_nbytes(self) -> int:
+        """Device bytes this pool's resident networks occupy, in the engine's
+        OWN representation (`Engine.network_nbytes`) — packed words for the
+        bitpacked backend, not logical cons bytes."""
+        occupied = sum(net is not None for net in self._nets)
+        return occupied * self.engine.network_nbytes(self.n_vars, self.dom_size)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slot_write(table, slot, value):
+    """In-place-ish slot update: with buffer donation XLA updates the resident
+    table without a copy (TPU/GPU; CPU falls back to a copy and warns once)."""
+    return table.at[slot].set(value)
+
+
+class StackedSlotPool(SlotPool):
+    """A device-resident `SlotPool`: the networks live in *stacked* device
+    tensors (a pytree of ``(C, ...)`` tables), installs write one slot row via
+    a donated ``.at[slot].set``, and ``enforce_rows`` is ONE dispatch that
+    gathers each row's network from the tables — the open-world analogue of
+    `PreparedMany`'s stacked dispatch (DESIGN.md §7).
+
+    The backend supplies its representation as three pieces:
+
+    - ``tables``: the initial (zeroed) slot tables — ``(C, n, n, d, d)`` bool
+      cons for the einsum engines, ``(C, n_p·d_p, n_p·W)`` packed uint32 words
+      for `pallas_packed`;
+    - ``encode(csp)``: one network compiled into a matching pytree of slot
+      rows (the only O(n²d²) step, paid once per install);
+    - ``dispatch(tables, doms, changed0, idx)``: the jitted gather + fixpoint
+      over the whole round.
+    """
+
+    stacked: ClassVar[bool] = True
+
+    def __init__(
+        self,
+        engine: "Engine",
+        n_vars: int,
+        dom_size: int,
+        capacity: int,
+        tables,
+        encode: Callable[[CSP], Any],
+        dispatch,
+    ):
+        super().__init__(engine, n_vars, dom_size, capacity)
+        self._tables = tables
+        self._encode = encode
+        self._dispatch = dispatch
+
+    def _prepare_slot(self, slot: int, csp: CSP):
+        row = self._encode(csp)
+        s = jnp.int32(slot)
+        with warnings.catch_warnings():
+            # CPU backends can't honour donation; the copy fallback is correct.
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            self._tables = jax.tree_util.tree_map(
+                lambda t, v: _slot_write(t, s, jnp.asarray(v)), self._tables, row
+            )
+        return True  # occupancy sentinel; the network lives in the tables
+
+    def grow(self, capacity: int) -> None:
+        old = self.capacity
+        super().grow(capacity)
+        if capacity > old:
+            self._tables = jax.tree_util.tree_map(
+                lambda t: jnp.pad(
+                    t, [(0, capacity - old)] + [(0, 0)] * (t.ndim - 1)
+                ),
+                self._tables,
+            )
+
+    def enforce_rows(self, doms, changed0: Changed = None, slot_idx=None):
+        idx = resolve_instance_idx(slot_idx, self.capacity, np.shape(doms)[0])
+        for j in np.unique(idx):
+            if self._nets[int(j)] is None:
+                raise ValueError(f"enforce_rows: slot {int(j)} is empty")
+        return self._dispatch(self._tables, doms, changed0, idx)
+
+    @property
+    def resident_nbytes(self) -> int:
+        """The actual footprint of the resident slot tables (all slots — the
+        table is allocated whole, occupied or not)."""
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(self._tables)
+        )
+
 
 def resolve_instance_idx(instance_idx, n_instances: int, n_rows: int) -> np.ndarray:
     """Normalize/validate the row→instance map of ``enforce_many``."""
@@ -310,6 +409,21 @@ class Engine(abc.ABC):
     #: False = the generic host-routing fallback, where padded rows would be
     #: real enforcement work thrown away.
     stacked_many: ClassVar[bool] = False
+    #: whether ``open_slot_pool`` is backed by a device-resident stacked slot
+    #: table (one gather+fixpoint dispatch per round). The service keys its
+    #: per-bucket wiring (round padding, occupancy accounting) off this
+    #: advertisement — engines declare the capability, callers never hardcode
+    #: backend names. True requires ``_open_stacked_slot_pool``.
+    slot_table: ClassVar[bool] = False
+
+    def network_nbytes(self, n_vars: int, dom_size: int) -> int:
+        """Resident device bytes of ONE prepared network of caller shape
+        (n_vars, dom_size) in THIS engine's representation — the unit the
+        service's cache budget counts. The generic answer is the logical bool
+        network (cons n²d² + mask n², one byte per element); engines with a
+        padded or packed resident form (the Pallas backends) override with
+        their true footprint, e.g. packed u32 words at 8× fewer bytes."""
+        return n_vars * n_vars * dom_size * dom_size + n_vars * n_vars
 
     def prepare(self, csp: CSP) -> PreparedNetwork:
         """Compile the constraint network into this backend's resident form.
@@ -376,9 +490,23 @@ class Engine(abc.ABC):
 
     def open_slot_pool(self, n_vars: int, dom_size: int, capacity: int) -> SlotPool:
         """A `SlotPool` of ``capacity`` resident network slots sharing one
-        (n_vars, dom_size) bucket shape. Generic host-routing implementation;
-        stacked engines override with a device-resident slot table."""
+        (n_vars, dom_size) bucket shape. Routed by the ``slot_table``
+        advertisement: stacked engines get their device-resident table
+        (`_open_stacked_slot_pool`), everything else the generic host-routing
+        pool."""
+        if self.slot_table:
+            return self._open_stacked_slot_pool(n_vars, dom_size, capacity)
         return SlotPool(self, n_vars, dom_size, capacity)
+
+    def _open_stacked_slot_pool(
+        self, n_vars: int, dom_size: int, capacity: int
+    ) -> StackedSlotPool:
+        """Backend hook for ``slot_table = True`` engines: build the
+        device-resident stacked pool (tables + encode + round dispatch)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} advertises slot_table=True but does not "
+            "implement _open_stacked_slot_pool"
+        )
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"<{type(self).__name__} name={self.name!r}>"

@@ -244,6 +244,65 @@ def enforce_many_generic(
     return jax.vmap(lambda nw, d, c: fn(nw, d, c))(net, dom, changed0)
 
 
+# revise_rows_fn(net_g, doms, changed) -> violated (R, n, d) bool — the stacked
+# analogue of ReviseFn: ``net_g`` is a pytree whose leaves carry a leading row
+# axis (row i's network, already gathered), and row i is revised against its
+# own network. The Pallas stacked kernels bind here (`repro.kernels.ops`).
+ReviseRowsFn = Callable
+
+
+class _RowState(NamedTuple):
+    dom: Array  # (R, n, d)
+    changed: Array  # (R, n)
+    consistent: Array  # (R,)
+    k: Array  # (R,) int32
+
+
+@functools.partial(jax.jit, static_argnames=("revise_rows_fn",))
+def enforce_rows_generic(
+    networks,
+    dom: Array,  # (R, n, d)
+    changed0: Optional[Array],  # (R, n) or None
+    instance_idx: Array,  # (R,) int32
+    revise_rows_fn: ReviseRowsFn,
+) -> EnforceResult:
+    """R incremental fixpoints, row i against ``networks[instance_idx[i]]``,
+    as ONE while_loop over a *stacked* revise (no vmap): every step revises all
+    still-active rows in a single stacked-kernel launch. Per-row results are
+    bit-identical to running `enforce_generic` on each row alone — a row is
+    *active* while ``consistent & any(changed)`` (exactly the solo loop
+    predicate), an inactive row's revision seed is zeroed (the incremental
+    revise is then a no-op, freezing its domain), and ``k`` counts only the
+    steps the row was active — so per-row recurrence counts match solo runs
+    even though the loop runs until the slowest row converges.
+    """
+    net = jax.tree_util.tree_map(lambda a: a[instance_idx], networks)
+    r, n, _ = dom.shape
+    if changed0 is None:
+        changed0 = jnp.ones((r, n), dtype=jnp.bool_)
+    consistent0 = ~jnp.any(jnp.sum(dom, axis=-1) == 0, axis=-1)  # (R,)
+    state = _RowState(
+        dom=dom,
+        changed=changed0 & consistent0[:, None],
+        consistent=consistent0,
+        k=jnp.zeros((r,), jnp.int32),
+    )
+
+    def cond(s: _RowState) -> Array:
+        return jnp.any(s.consistent & jnp.any(s.changed, axis=-1))
+
+    def body(s: _RowState) -> _RowState:
+        active = s.consistent & jnp.any(s.changed, axis=-1)  # (R,)
+        violated = revise_rows_fn(net, s.dom, s.changed & active[:, None])
+        new_dom = s.dom & ~violated
+        changed = jnp.any(new_dom != s.dom, axis=-1)
+        consistent = s.consistent & ~jnp.any(jnp.sum(new_dom, axis=-1) == 0, axis=-1)
+        return _RowState(new_dom, changed, consistent, s.k + active.astype(jnp.int32))
+
+    final = lax.while_loop(cond, body, state)
+    return EnforceResult(final.dom, final.consistent, final.k)
+
+
 @functools.partial(jax.jit, static_argnames=("support_fn",))
 def enforce_full_many(
     cons: Array,  # (B, n, n, d, d)

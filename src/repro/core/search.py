@@ -482,6 +482,9 @@ def solve_many(
         prepared.enforce_many,
         prepared.n_vars,
         count_unit=eng.count_unit,
+        # capability advertisement, not a backend-name check: every stacked
+        # engine (einsum/full and the Pallas stacked kernels) pads rounds for
+        # jit-shape reuse; host-routing engines would pay for padded rows
         pad_rounds=eng.stacked_many,
     )
     all_stats = [

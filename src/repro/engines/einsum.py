@@ -7,13 +7,9 @@ support test for every (x, a) each step — kept as the fidelity baseline.
 
 from __future__ import annotations
 
-import functools
-import warnings
 from typing import List
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import rtac
 from repro.core.csp import CSP
@@ -21,7 +17,7 @@ from repro.core.engine import (
     Engine,
     PreparedMany,
     PreparedNetwork,
-    SlotPool,
+    StackedSlotPool,
     as_changed,
     resolve_instance_idx,
 )
@@ -37,53 +33,25 @@ def _stack_networks(csps: List[CSP]):
     )
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _slot_write(stack, slot, value):
-    """In-place-ish slot update: with buffer donation XLA updates the resident
-    stack without a copy (TPU/GPU; CPU falls back to a copy and warns once)."""
-    return stack.at[slot].set(value)
+def _open_einsum_pool(engine, n_vars, dom_size, capacity, round_dispatch):
+    """Shared einsum/full slot pool: unpadded bool (C, n, n, d, d) / (C, n, n)
+    tables; the round dispatch is the same jitted gather+vmap fixpoint as
+    `enforce_many`."""
+    n, d = n_vars, dom_size
+    tables = (
+        jnp.zeros((capacity, n, n, d, d), jnp.bool_),
+        jnp.zeros((capacity, n, n), jnp.bool_),
+    )
 
-
-class _StackedSlotPool(SlotPool):
-    """Device-resident slot table for the vmappable engines: installs write
-    one network into the stacked (C, n, n, d, d) / (C, n, n) tensors, and
-    ``enforce_rows`` is ONE jitted gather+vmap fixpoint over the whole round —
-    the open-world analogue of `PreparedMany`'s stacked dispatch."""
-
-    stacked = True
-
-    def __init__(self, engine, n_vars, dom_size, capacity, dispatch):
-        super().__init__(engine, n_vars, dom_size, capacity)
-        self._round_dispatch = dispatch
-        n, d = n_vars, dom_size
-        self._cons = jnp.zeros((capacity, n, n, d, d), jnp.bool_)
-        self._mask = jnp.zeros((capacity, n, n), jnp.bool_)
-
-    def _prepare_slot(self, slot: int, csp: CSP):
-        with warnings.catch_warnings():
-            # CPU backends can't honour donation; the copy fallback is correct.
-            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            self._cons = _slot_write(self._cons, jnp.int32(slot), jnp.asarray(csp.cons))
-            self._mask = _slot_write(self._mask, jnp.int32(slot), jnp.asarray(csp.mask))
-        return True  # occupancy sentinel; the network lives in the stacks
-
-    def grow(self, capacity: int) -> None:
-        old = self.capacity
-        super().grow(capacity)
-        if capacity > old:
-            pad = [(0, capacity - old)] + [(0, 0)] * (self._cons.ndim - 1)
-            self._cons = jnp.pad(self._cons, pad)
-            self._mask = jnp.pad(self._mask, pad[:3])
-
-    def enforce_rows(self, doms, changed0=None, slot_idx=None):
-        doms = jnp.asarray(doms)
-        idx = resolve_instance_idx(slot_idx, self.capacity, doms.shape[0])
-        for j in np.unique(idx):
-            if self._nets[int(j)] is None:
-                raise ValueError(f"enforce_rows: slot {int(j)} is empty")
-        return self._round_dispatch(
-            (self._cons, self._mask), doms, as_changed(changed0), jnp.asarray(idx)
+    def dispatch(tables, doms, changed0, idx):
+        return round_dispatch(
+            tables, jnp.asarray(doms), as_changed(changed0), jnp.asarray(idx)
         )
+
+    return StackedSlotPool(
+        engine, n_vars, dom_size, capacity,
+        tables, encode=lambda csp: (csp.cons, csp.mask), dispatch=dispatch,
+    )
 
 
 def _revise_for(support_fn: SupportFn):
@@ -99,6 +67,7 @@ class EinsumEngine(Engine):
 
     name = "einsum"
     stacked_many = True
+    slot_table = True
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -130,13 +99,13 @@ class EinsumEngine(Engine):
             revise_fn=self._revise_fn,
         )
 
-    def open_slot_pool(self, n_vars: int, dom_size: int, capacity: int) -> SlotPool:
+    def _open_stacked_slot_pool(self, n_vars, dom_size, capacity) -> StackedSlotPool:
         def dispatch(networks, doms, changed0, idx):
             return rtac.enforce_many_generic(
                 networks, doms, changed0, idx, revise_fn=self._revise_fn
             )
 
-        return _StackedSlotPool(self, n_vars, dom_size, capacity, dispatch)
+        return _open_einsum_pool(self, n_vars, dom_size, capacity, dispatch)
 
 
 @register
@@ -146,6 +115,7 @@ class FullEngine(Engine):
 
     name = "full"
     stacked_many = True
+    slot_table = True
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -172,10 +142,10 @@ class FullEngine(Engine):
             cons, mask, doms, jnp.asarray(idx), support_fn=self.support_fn
         )
 
-    def open_slot_pool(self, n_vars: int, dom_size: int, capacity: int) -> SlotPool:
+    def _open_stacked_slot_pool(self, n_vars, dom_size, capacity) -> StackedSlotPool:
         def dispatch(networks, doms, changed0, idx):
             cons, mask = networks
             del changed0  # the paper-faithful recurrence re-tests everything
             return rtac.enforce_full_many(cons, mask, doms, idx, support_fn=self.support_fn)
 
-        return _StackedSlotPool(self, n_vars, dom_size, capacity, dispatch)
+        return _open_einsum_pool(self, n_vars, dom_size, capacity, dispatch)

@@ -7,14 +7,41 @@ see padded shapes. The revise closures come from the ``lru_cache``-d factories
 in `repro.kernels.ops`, so their identity is stable and the RTAC fixpoint
 compiles once per (shape, blocks) — including under ``vmap`` for
 ``enforce_batch`` (Pallas interpret and compiled modes both batch).
+
+Workload/service paths are fully device-resident (no host routing):
+
+- ``prepare_many`` stacks the per-instance prepared networks into
+  ``(B, n_p·d_p, cols)`` tables (packed uint32 words for `pallas_packed`) and
+  ``enforce_many`` runs ONE stacked fixpoint (`rtac.enforce_rows_generic`)
+  whose revise is the stacked kernel — the grid carries the instance axis.
+- ``open_slot_pool`` backs the service with a `StackedSlotPool` over the same
+  tables: installs are donated ``.at[slot].set`` row writes into the
+  ``(C, n_p·d_p, n_p·W)`` packed slot table, and every round is one jitted
+  gather + stacked-kernel dispatch. Results are bit-identical to the einsum
+  slot path by construction (same coroutine, same per-row fixpoint semantics).
+
+``network_nbytes`` reports the engine's TRUE resident footprint — padded u8
+bytes for `pallas_dense`, packed u32 words (8× less) for `pallas_packed` — so
+the service cache budget admits proportionally more packed networks.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import rtac
 from repro.core.csp import CSP
-from repro.core.engine import Engine, PreparedNetwork, pad_changed, pad_dom
+from repro.core.engine import (
+    Engine,
+    PreparedMany,
+    PreparedNetwork,
+    StackedSlotPool,
+    as_changed,
+    pad_changed,
+    pad_dom,
+    padded_shape,
+    resolve_instance_idx,
+)
 from repro.core.rtac import EnforceResult, enforce_batch_generic, enforce_generic
 from repro.kernels import ops
 from . import register
@@ -23,25 +50,41 @@ from . import register
 class _PallasEngine(Engine):
     """Shared prepare/enforce plumbing; subclasses pick the kernel binding.
 
-    ``prepare_many``/``enforce_many`` use the generic per-instance fallback:
-    vmapping a `pallas_call` over the *constraint* operand would re-trace the
-    kernel per instance anyway in interpret mode, so the workload path keeps
-    one prepared (padded + bitpacked) network per instance and routes rows on
-    the host. Each instance still pays its O(n²d²) preparation exactly once.
+    Subclass hooks (``dims`` is the kernel-coordinate tuple — (n_p, d_p) for
+    dense, (n_p, d_p, w) for packed):
+
+    - ``_prepare_net(csp) -> (network, dims)`` — the memoized padded/packed
+      resident form;
+    - ``_dims(n, d)`` — kernel dims for a caller shape (no CSP needed; must
+      agree with ``_prepare_net`` for that shape);
+    - ``_revise_fn(dims)`` / ``_rows_fn(dims)`` — the single and stacked
+      revise closures;
+    - ``_empty_tables(dims, capacity)`` — zeroed slot tables for the pool.
     """
+
+    stacked_many = True
+    slot_table = True
 
     def __init__(self, block_rx: int = 8, block_ry: int = 8, interpret: bool = True):
         self.block_rx = block_rx
         self.block_ry = block_ry
         self.interpret = interpret
 
-    # subclasses: _build(csp) -> (network, (n_p, d_p), revise_fn)
+    def _pad_shape(self, n: int, d: int):
+        """The §2 padding the kernel shims apply for this engine's blocks —
+        same `padded_shape` formula, same `ops.D_MULT`, agreement by
+        construction."""
+        return padded_shape(n, d, max(self.block_rx, self.block_ry), ops.D_MULT)
+
+    # --- single-network path (one search, many domains) ---------------------
 
     def _prepare_payload(self, csp: CSP):
-        return self._build(csp)
+        network, dims = self._prepare_net(csp)
+        return network, dims, self._revise_fn(dims)
 
     def enforce(self, prepared: PreparedNetwork, dom, changed0=None) -> EnforceResult:
-        network, (n_p, d_p), revise_fn = prepared.payload
+        network, dims, revise_fn = prepared.payload
+        n_p, d_p = dims[0], dims[1]
         n, d = prepared.n_vars, prepared.dom_size
         dom_p = pad_dom(jnp.asarray(dom), n_p, d_p)
         ch_p = pad_changed(changed0, n, n_p)
@@ -49,13 +92,66 @@ class _PallasEngine(Engine):
         return EnforceResult(res.dom[:n, :d], res.consistent, res.n_recurrences)
 
     def enforce_batch(self, prepared: PreparedNetwork, doms, changed0=None) -> EnforceResult:
-        network, (n_p, d_p), revise_fn = prepared.payload
+        network, dims, revise_fn = prepared.payload
+        n_p, d_p = dims[0], dims[1]
         n, d = prepared.n_vars, prepared.dom_size
         doms = jnp.asarray(doms)
         dom_p = pad_dom(doms, n_p, d_p)
         ch_p = pad_changed(changed0, n, n_p, batch=doms.shape[:-2])
         res = enforce_batch_generic(network, dom_p, ch_p, revise_fn=revise_fn)
         return EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    # --- stacked workload path (R rows, each against its OWN network) -------
+
+    def _prepare_many_payload(self, csps):
+        nets = [self._prepare_net(c) for c in csps]
+        dims = nets[0][1]
+        tables = (
+            jnp.stack([net[0][0] for net in nets]),
+            jnp.stack([net[0][1] for net in nets]),
+        )
+        return tables, dims, self._rows_fn(dims)
+
+    def _rows_dispatch(self, tables, dims, rows_fn, n, d, doms, changed0, idx):
+        """Pad R caller-coordinate rows into kernel coordinates, run the ONE
+        stacked gather+kernel fixpoint, un-pad. Shared by `enforce_many` and
+        the slot pool."""
+        n_p, d_p = dims[0], dims[1]
+        doms = jnp.asarray(doms)
+        dom_p = pad_dom(doms, n_p, d_p)
+        ch_p = pad_changed(as_changed(changed0), n, n_p, batch=doms.shape[:-2])
+        res = rtac.enforce_rows_generic(
+            tables, dom_p, ch_p, jnp.asarray(idx), revise_rows_fn=rows_fn
+        )
+        return EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    def enforce_many(
+        self, prepared: PreparedMany, doms, changed0=None, instance_idx=None
+    ) -> EnforceResult:
+        tables, dims, rows_fn = prepared.payload
+        idx = resolve_instance_idx(
+            instance_idx, prepared.n_instances, len(doms)
+        )
+        return self._rows_dispatch(
+            tables, dims, rows_fn,
+            prepared.n_vars, prepared.dom_size, doms, changed0, idx,
+        )
+
+    def _open_stacked_slot_pool(self, n_vars, dom_size, capacity) -> StackedSlotPool:
+        dims = self._dims(n_vars, dom_size)
+        rows_fn = self._rows_fn(dims)
+
+        def dispatch(tables, doms, changed0, idx):
+            return self._rows_dispatch(
+                tables, dims, rows_fn, n_vars, dom_size, doms, changed0, idx
+            )
+
+        return StackedSlotPool(
+            self, n_vars, dom_size, capacity,
+            self._empty_tables(dims, capacity),
+            encode=lambda csp: self._prepare_net(csp)[0],
+            dispatch=dispatch,
+        )
 
 
 @register
@@ -64,12 +160,31 @@ class PallasDenseEngine(_PallasEngine):
 
     name = "pallas_dense"
 
-    def _build(self, csp: CSP):
+    def _prepare_net(self, csp: CSP):
         network, _, (n_p, d_p) = ops.prepare_dense(csp, self.block_rx, self.block_ry)
-        revise_fn = ops._dense_revise_fn(
-            n_p, d_p, self.block_rx, self.block_ry, self.interpret
+        return network, (n_p, d_p)
+
+    def _dims(self, n: int, d: int):
+        return self._pad_shape(n, d)
+
+    def _revise_fn(self, dims):
+        n_p, d_p = dims
+        return ops._dense_revise_fn(n_p, d_p, self.block_rx, self.block_ry, self.interpret)
+
+    def _rows_fn(self, dims):
+        n_p, d_p = dims
+        return ops._dense_rows_fn(n_p, d_p, self.block_rx, self.block_ry, self.interpret)
+
+    def _empty_tables(self, dims, capacity: int):
+        n_p, d_p = dims
+        return (
+            jnp.zeros((capacity, n_p * d_p, n_p * d_p), jnp.uint8),
+            jnp.zeros((capacity, n_p, n_p), jnp.uint8),
         )
-        return network, (n_p, d_p), revise_fn
+
+    def network_nbytes(self, n_vars: int, dom_size: int) -> int:
+        n_p, d_p = self._pad_shape(n_vars, dom_size)
+        return n_p * d_p * n_p * d_p + n_p * n_p  # u8 cons2 + u8 mask
 
 
 @register
@@ -79,9 +194,33 @@ class PallasPackedEngine(_PallasEngine):
 
     name = "pallas_packed"
 
-    def _build(self, csp: CSP):
+    def _prepare_net(self, csp: CSP):
         network, _, (n_p, d_p, w) = ops.prepare_packed(csp, self.block_rx, self.block_ry)
-        revise_fn = ops._packed_revise_fn(
+        return network, (n_p, d_p, w)
+
+    def _dims(self, n: int, d: int):
+        n_p, d_p = self._pad_shape(n, d)
+        return n_p, d_p, -(-d_p // 32)
+
+    def _revise_fn(self, dims):
+        n_p, d_p, w = dims
+        return ops._packed_revise_fn(
             n_p, d_p, w, self.block_rx, self.block_ry, self.interpret
         )
-        return network, (n_p, d_p), revise_fn
+
+    def _rows_fn(self, dims):
+        n_p, d_p, w = dims
+        return ops._packed_rows_fn(
+            n_p, d_p, w, self.block_rx, self.block_ry, self.interpret
+        )
+
+    def _empty_tables(self, dims, capacity: int):
+        n_p, d_p, w = dims
+        return (
+            jnp.zeros((capacity, n_p * d_p, n_p * w), jnp.uint32),
+            jnp.zeros((capacity, n_p, n_p), jnp.uint8),
+        )
+
+    def network_nbytes(self, n_vars: int, dom_size: int) -> int:
+        n_p, d_p, w = self._dims(n_vars, dom_size)
+        return n_p * d_p * n_p * w * 4 + n_p * n_p  # u32 packed words + u8 mask

@@ -11,6 +11,15 @@ Layout mirrors rtac_support.py with the b-axis packed:
   cons_p2[(x·d + a), (y·W + w)]  uint32,  W = ceil(d/32)
   grid (i over x-row-blocks, j over y-col-blocks), j sequential-reduce
   support test:  has[x,a,y] = any_w( cons_word & dom_word ) != 0
+
+Two bindings of the same body:
+
+- :func:`packed_revise` — one network, one domain (the single-search hot path);
+- :func:`packed_revise_stacked` — the workload/service form (DESIGN.md §6/§7):
+  the grid grows a leading *instance* axis ``r`` and every operand carries a
+  matching leading row axis, so R rows — each already gathered from the
+  ``(C, n·d, n·W)`` packed slot table by the dispatch — revise against their
+  OWN packed network in one kernel launch.
 """
 
 from __future__ import annotations
@@ -83,3 +92,70 @@ def packed_revise(
         out_shape=jax.ShapeDtypeStruct((1, nd), jnp.uint8),
         interpret=interpret,
     )(cons_p2, dom_p, changed, mask)
+
+
+def _revise_packed_stacked_kernel(
+    cons_ref, dom_ref, changed_ref, mask_ref, out_ref, *, w: int, d: int
+):
+    """Same body as `_revise_packed_kernel`, with a leading instance axis:
+    grid (r, i, j), every block a (1, ...) slice of row r's operands."""
+    j = pl.program_id(2)
+
+    br = cons_ref.shape[1]  # RX * d
+    rx = mask_ref.shape[1]
+    ry = mask_ref.shape[2]
+
+    c = cons_ref[0]  # (BR, RY*W) uint32
+    dw = dom_ref[0]  # (1, RY*W) uint32
+    anded = c & dw
+    has_any = jnp.any(anded.reshape(br, ry, w) != 0, axis=-1)  # (BR, RY)
+    m = mask_ref[0].astype(jnp.bool_)
+    m_rows = jnp.broadcast_to(m[:, None, :], (rx, d, ry)).reshape(br, ry)
+    has = has_any | ~m_rows
+    ch = changed_ref[0].astype(jnp.bool_)  # (1, RY)
+    viol = jnp.any(ch & ~has, axis=-1)  # (BR,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] = out_ref[...] | viol[None, None, :].astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "w", "block_rx", "block_ry", "interpret")
+)
+def packed_revise_stacked(
+    cons_g: Array,  # (R, n*d, n*W) uint32 — row r's network, slot-table gathered
+    dom_p: Array,  # (R, 1, n*W) uint32
+    changed: Array,  # (R, 1, n) uint8
+    mask: Array,  # (R, n, n) uint8
+    *,
+    d: int,
+    w: int,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    interpret: bool = True,
+) -> Array:
+    """R simultaneous packed revisions, each against its own network: the grid
+    carries the instance axis (r, i, j); j is the sequential reduction."""
+    r, nd = cons_g.shape[0], cons_g.shape[1]
+    n = nd // d
+    assert cons_g.shape[2] == n * w
+    assert n % block_rx == 0 and n % block_ry == 0, (n, block_rx, block_ry)
+    br, bcw = block_rx * d, block_ry * w
+    grid = (r, n // block_rx, n // block_ry)
+
+    return pl.pallas_call(
+        functools.partial(_revise_packed_stacked_kernel, w=w, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bcw), lambda r, i, j: (r, i, j)),
+            pl.BlockSpec((1, 1, bcw), lambda r, i, j: (r, 0, j)),
+            pl.BlockSpec((1, 1, block_ry), lambda r, i, j: (r, 0, j)),
+            pl.BlockSpec((1, block_rx, block_ry), lambda r, i, j: (r, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, br), lambda r, i, j: (r, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, 1, nd), jnp.uint8),
+        interpret=interpret,
+    )(cons_g, dom_p, changed, mask)

@@ -33,6 +33,10 @@ from . import bitpack_support, ref, rtac_support
 
 Array = jax.Array
 
+#: value-axis tile multiple both kernels pad d to (the one place it is set —
+#: engines sizing slot tables without a CSP import this)
+D_MULT = 8
+
 # (kind, blocks, id(cons), id(mask)) -> (wref(cons), wref(mask), (network, dims)).
 # Keyed by the identity of BOTH network tensors — the prepared form embeds the
 # mask, so a CSP sharing `cons` but carrying a different `mask` must miss. The
@@ -87,7 +91,7 @@ def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
     The network half is memoized per CSP; the domain is padded fresh (O(n·d))."""
 
     def build():
-        cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), 8)
+        cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), D_MULT)
         cons2 = (
             jnp.transpose(cons, (0, 2, 1, 3))
             .reshape(n_p * d_p, n_p * d_p)
@@ -97,6 +101,29 @@ def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
 
     network, (n_p, d_p) = _cached("dense", csp, block_rx, block_ry, build)
     return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p)
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_rows_fn(n_p: int, d_p: int, block_rx: int, block_ry: int, interpret: bool):
+    """Stacked revise-rows closure (rtac.ReviseRowsFn) for the dense u8 kernel:
+    ``net_g`` leaves carry a leading row axis (gathered from the slot table)."""
+
+    def revise_rows(net_g, doms, changed):
+        cons_g, mask_g = net_g  # (R, n_p*d_p, n_p*d_p) u8, (R, n_p, n_p) u8
+        r = doms.shape[0]
+        viol = rtac_support.dense_revise_stacked(
+            cons_g,
+            doms.astype(jnp.uint8).reshape(r, 1, n_p * d_p),
+            changed.astype(jnp.uint8).reshape(r, 1, n_p),
+            mask_g,
+            d=d_p,
+            block_rx=block_rx,
+            block_ry=block_ry,
+            interpret=interpret,
+        )
+        return viol.reshape(r, n_p, d_p).astype(jnp.bool_)
+
+    return revise_rows
 
 
 # ---------------------------------------------------------------------------
@@ -138,9 +165,37 @@ def prepare_packed(csp: CSP, block_rx: int = 8, block_ry: int = 8):
     """-> (network, dom_padded, (n_p, d_p, w)); network memoized per CSP."""
 
     def build():
-        cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), 8)
+        cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), D_MULT)
         cons_p2, w = pack_network(cons, n_p, d_p)
         return (cons_p2, mask.astype(jnp.uint8)), (n_p, d_p, w)
 
     network, (n_p, d_p, w) = _cached("packed", csp, block_rx, block_ry, build)
     return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p, w)
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_rows_fn(
+    n_p: int, d_p: int, w: int, block_rx: int, block_ry: int, interpret: bool
+):
+    """Stacked revise-rows closure (rtac.ReviseRowsFn) for the bitpacked u32
+    kernel: row domains are packed fresh (O(R·n·d)); the packed networks ride
+    gathered from the (C, n·d, n·W) slot table."""
+
+    def revise_rows(net_g, doms, changed):
+        cons_g, mask_g = net_g  # (R, n_p*d_p, n_p*w) u32, (R, n_p, n_p) u8
+        r = doms.shape[0]
+        dom_pk = ref.pack_bits_ref(doms).reshape(r, 1, n_p * w)
+        viol = bitpack_support.packed_revise_stacked(
+            cons_g,
+            dom_pk,
+            changed.astype(jnp.uint8).reshape(r, 1, n_p),
+            mask_g,
+            d=d_p,
+            w=w,
+            block_rx=block_rx,
+            block_ry=block_ry,
+            interpret=interpret,
+        )
+        return viol.reshape(r, n_p, d_p).astype(jnp.bool_)
+
+    return revise_rows

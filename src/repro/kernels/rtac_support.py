@@ -99,3 +99,67 @@ def dense_revise(
         out_shape=jax.ShapeDtypeStruct((1, nd), jnp.uint8),
         interpret=interpret,
     )(cons2, dom_flat, changed, mask)
+
+
+def _revise_stacked_kernel(cons_ref, dom_ref, changed_ref, mask_ref, out_ref, *, d: int):
+    """Same body as `_revise_kernel`, with a leading instance axis: grid
+    (r, i, j), every block a (1, ...) slice of row r's operands."""
+    j = pl.program_id(2)
+
+    br = cons_ref.shape[1]
+    rx = mask_ref.shape[1]
+    ry = mask_ref.shape[2]
+
+    c = cons_ref[0]  # (BR, BC) uint8
+    dval = dom_ref[0]  # (1, BC) uint8
+    sup = (c & dval).astype(jnp.int32)
+    cnt = jnp.sum(sup.reshape(br, ry, d), axis=-1)
+    m = mask_ref[0].astype(jnp.bool_)  # (RX, RY)
+    m_rows = jnp.broadcast_to(m[:, None, :], (rx, d, ry)).reshape(br, ry)
+    has = (cnt > 0) | ~m_rows
+    ch = changed_ref[0].astype(jnp.bool_)  # (1, RY)
+    viol = jnp.any(ch & ~has, axis=-1)  # (BR,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] = out_ref[...] | viol[None, None, :].astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "block_rx", "block_ry", "interpret")
+)
+def dense_revise_stacked(
+    cons_g: Array,  # (R, n*d, n*d) uint8 — row r's network, slot-table gathered
+    dom_flat: Array,  # (R, 1, n*d) uint8
+    changed: Array,  # (R, 1, n) uint8
+    mask: Array,  # (R, n, n) uint8
+    *,
+    d: int,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    interpret: bool = True,
+) -> Array:
+    """R simultaneous dense revisions, each against its own network: the grid
+    carries the instance axis (r, i, j); j is the sequential reduction.
+    Returns violated (R, 1, n*d) uint8."""
+    r, nd = cons_g.shape[0], cons_g.shape[1]
+    n = nd // d
+    assert n % block_rx == 0 and n % block_ry == 0, (n, block_rx, block_ry)
+    br, bc = block_rx * d, block_ry * d
+    grid = (r, n // block_rx, n // block_ry)
+
+    return pl.pallas_call(
+        functools.partial(_revise_stacked_kernel, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda r, i, j: (r, i, j)),
+            pl.BlockSpec((1, 1, bc), lambda r, i, j: (r, 0, j)),
+            pl.BlockSpec((1, 1, block_ry), lambda r, i, j: (r, 0, j)),
+            pl.BlockSpec((1, block_rx, block_ry), lambda r, i, j: (r, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, br), lambda r, i, j: (r, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, 1, nd), jnp.uint8),
+        interpret=interpret,
+    )(cons_g, dom_flat, changed, mask)

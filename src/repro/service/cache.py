@@ -8,6 +8,12 @@ constraint network* (cons + mask — NOT the domain, which is per-request) to
 the bucket slot where that network is installed, with LRU eviction under an
 explicit byte budget.
 
+Byte accounting is in the ENGINE's resident representation, not logical cons
+bytes: the service supplies each entry's ``nbytes`` from
+`Engine.network_nbytes(bucket.n_p, bucket.d_p)`, so on `pallas_packed` an
+entry costs packed uint32 words (≈8× fewer bytes than the bool network) and
+the same budget legally holds ≈8× more networks resident.
+
 Pinning: every in-flight search against a network holds a pin on its entry,
 and eviction skips pinned entries unconditionally — a network is only ever
 evicted between flights. The byte budget is therefore a *target*: if every

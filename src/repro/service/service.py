@@ -245,7 +245,10 @@ class SolverService:
                 pool.enforce_rows,
                 bucket.n_p,
                 count_unit=self.engine.count_unit,
-                pad_rounds=pool.stacked,
+                # Engines ADVERTISE slot-table support (Engine.slot_table);
+                # round padding pays off exactly when the dispatch is one
+                # jit-shaped stacked program — never hardcode backend names.
+                pad_rounds=self.engine.slot_table,
             )
             rt = self._buckets[bucket] = _BucketRuntime(bucket, pool, driver)
         return rt
@@ -269,8 +272,16 @@ class SolverService:
                 rt.pool.install(slot, padded)
                 return slot
 
+            # The cache budget counts the ENGINE's resident bytes for this
+            # bucket shape — packed u32 words on pallas_packed (≈8× fewer
+            # bytes than the logical bool network), padded u8 on pallas_dense,
+            # the logical network elsewhere — so the same budget legally holds
+            # proportionally more packed networks.
             entry, _hit = self.cache.acquire(
-                req.bucket, req.fingerprint, req.bucket.network_nbytes, install
+                req.bucket,
+                req.fingerprint,
+                self.engine.network_nbytes(req.bucket.n_p, req.bucket.d_p),
+                install,
             )
             req.stats = rt.driver.admit(
                 req.id,
@@ -328,6 +339,7 @@ class SolverService:
                 "capacity": rt.pool.capacity,
                 "free_slots": len(rt.free_slots),
                 "active": len(rt.active),
+                "resident_nbytes": rt.pool.resident_nbytes,
             }
             for b, rt in sorted(self._buckets.items())
         }

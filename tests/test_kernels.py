@@ -2,7 +2,13 @@
 
 Per instructions: sweep shapes/dtypes and assert allclose (here: exact equality
 — the kernels are boolean) against the oracle, plus hypothesis-random CSPs and
-end-to-end fixpoint equality.
+end-to-end fixpoint equality. The stacked (instance-axis-in-the-grid) kernel
+variants are validated row-by-row: every row must equal the oracle applied to
+that row's OWN network.
+
+The whole module is `pytest.mark.pallas`: interpret mode executes kernel
+bodies in Python, so these run in CI's dedicated pallas leg, not the main
+tier-1 matrix.
 """
 
 import numpy as np
@@ -11,6 +17,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import enforce, random_csp
+from repro.core.engine import pad_changed, pad_dom
 from repro.engines import get_engine
 from repro.kernels import ops
 from repro.kernels.ref import (
@@ -18,6 +25,8 @@ from repro.kernels.ref import (
     revise_packed_ref,
     revise_ref,
 )
+
+pytestmark = pytest.mark.pallas
 
 SHAPE_SWEEP = [
     # (n_vars, dom_size, block_rx, block_ry)
@@ -63,6 +72,103 @@ def test_packed_kernel_matches_oracle(n, d, brx, bry):
         oracle = revise_ref(csp.cons, csp.mask, csp.dom, ch)
         got = rf(net, dom_p, jnp.pad(ch, (0, n_p - n)))[:n, :d]
         np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+
+
+# --- stacked kernels: R rows, each against its OWN network -------------------
+
+STACK_SWEEP = [
+    (8, 5, 8, 8),
+    (16, 8, 8, 8),
+    (16, 8, 4, 8),
+    (24, 33, 8, 8),  # d > 32: multi-word bitpack
+]
+
+
+def _stacked_fixture(n, d, brx, bry, prepare):
+    """3 networks, 5 rows via idx [2,0,1,2,0], mixed changed patterns."""
+    csps = [random_csp(n, d, 0.6, 0.4, seed=300 + i) for i in range(3)]
+    prepared = [prepare(c, brx, bry) for c in csps]
+    dims = prepared[0][2]
+    cons_g = jnp.stack([p[0][0] for p in prepared])
+    mask_g = jnp.stack([p[0][1] for p in prepared])
+    idx = np.array([2, 0, 1, 2, 0], np.int32)
+    rng = np.random.default_rng(n * 7 + d)
+    doms = np.stack([np.asarray(csps[j].dom) for j in idx])
+    changed = rng.random((len(idx), n)) < 0.5
+    changed[0] = True  # one all-changed row (the root-propagation shape)
+    return csps, (cons_g, mask_g), dims, idx, doms, changed
+
+
+@pytest.mark.parametrize("n,d,brx,bry", STACK_SWEEP)
+def test_stacked_dense_rows_match_oracle(n, d, brx, bry):
+    csps, (cons_g, mask_g), (n_p, d_p), idx, doms, changed = _stacked_fixture(
+        n, d, brx, bry, ops.prepare_dense
+    )
+    rf = ops._dense_rows_fn(n_p, d_p, brx, bry, True)
+    dom_p = pad_dom(jnp.asarray(doms), n_p, d_p)
+    ch_p = pad_changed(jnp.asarray(changed), n, n_p, batch=(len(idx),))
+    got = np.asarray(rf((cons_g[idx], mask_g[idx]), dom_p, ch_p))
+    for row, j in enumerate(idx):
+        oracle = revise_ref(
+            csps[j].cons, csps[j].mask, jnp.asarray(doms[row]), jnp.asarray(changed[row])
+        )
+        np.testing.assert_array_equal(got[row, :n, :d], np.asarray(oracle))
+
+
+@pytest.mark.parametrize("n,d,brx,bry", STACK_SWEEP)
+def test_stacked_packed_rows_match_oracle(n, d, brx, bry):
+    csps, (cons_g, mask_g), (n_p, d_p, w), idx, doms, changed = _stacked_fixture(
+        n, d, brx, bry, ops.prepare_packed
+    )
+    rf = ops._packed_rows_fn(n_p, d_p, w, brx, bry, True)
+    dom_p = pad_dom(jnp.asarray(doms), n_p, d_p)
+    ch_p = pad_changed(jnp.asarray(changed), n, n_p, batch=(len(idx),))
+    got = np.asarray(rf((cons_g[idx], mask_g[idx]), dom_p, ch_p))
+    for row, j in enumerate(idx):
+        oracle = revise_ref(
+            csps[j].cons, csps[j].mask, jnp.asarray(doms[row]), jnp.asarray(changed[row])
+        )
+        np.testing.assert_array_equal(got[row, :n, :d], np.asarray(oracle))
+
+
+def test_enforce_rows_generic_matches_solo_recurrence_counts():
+    """The stacked fixpoint freezes converged/wiped-out rows: per-row domains,
+    verdicts AND recurrence counts equal solo `enforce_generic` runs even
+    though the while_loop runs until the slowest row converges."""
+    n, d, brx, bry = 10, 6, 8, 8
+    csps = [random_csp(n, d, 0.7, 0.5, seed=40 + i) for i in range(3)]
+    prepared = [ops.prepare_packed(c, brx, bry) for c in csps]
+    n_p, d_p, w = prepared[0][2]
+    tables = (
+        jnp.stack([p[0][0] for p in prepared]),
+        jnp.stack([p[0][1] for p in prepared]),
+    )
+    rf = ops._packed_rows_fn(n_p, d_p, w, brx, bry, True)
+    idx = np.array([0, 1, 2, 1], np.int32)
+    doms = np.stack([np.asarray(csps[j].dom) for j in idx])
+    doms[3, 0, 1:] = False  # a row that starts near wipeout
+    from repro.core import rtac
+
+    res = rtac.enforce_rows_generic(
+        tables,
+        pad_dom(jnp.asarray(doms), n_p, d_p),
+        pad_changed(None, n, n_p, batch=(len(idx),)),
+        jnp.asarray(idx),
+        revise_rows_fn=rf,
+    )
+    for row, j in enumerate(idx):
+        solo = rtac.enforce_generic(
+            prepared[j][0],
+            pad_dom(jnp.asarray(doms[row]), n_p, d_p),
+            pad_changed(None, n, n_p),
+            revise_fn=ops._packed_revise_fn(n_p, d_p, w, brx, bry, True),
+        )
+        assert bool(np.asarray(res.consistent)[row]) == bool(np.asarray(solo.consistent))
+        assert int(np.asarray(res.n_recurrences)[row]) == int(np.asarray(solo.n_recurrences))
+        if bool(np.asarray(solo.consistent)):
+            np.testing.assert_array_equal(
+                np.asarray(res.dom)[row], np.asarray(solo.dom)
+            )
 
 
 def test_packed_oracle_matches_dense_oracle():

@@ -40,7 +40,16 @@ def test_enforce_many_matches_per_instance_enforce(engine):
         assert int(np.asarray(res.n_recurrences)[i]) == int(np.asarray(one.n_recurrences))
 
 
-@pytest.mark.parametrize("engine", ["einsum", "full", "ac3"])
+@pytest.mark.parametrize(
+    "engine",
+    [
+        "einsum",
+        "full",
+        "ac3",
+        pytest.param("pallas_dense", marks=pytest.mark.pallas),
+        pytest.param("pallas_packed", marks=pytest.mark.pallas),
+    ],
+)
 def test_enforce_many_instance_idx_routing(engine):
     csps = _batch(count=4, n=10, hardness=0.8)
     pm = get_engine(engine).prepare_many(csps)

@@ -10,7 +10,9 @@ search statistics bit-identical to running `mac_solve` on each CSP alone.
 import numpy as np
 import pytest
 
+import repro.core.engine as engine_mod
 from repro.core import check_solution, mac_solve
+from repro.engines import get_engine
 from repro.problems import generate, generate_batch
 from repro.service import (
     Bucket,
@@ -141,7 +143,131 @@ def test_trace_replay_completes_and_measures():
     assert snap["mean_rows_per_dispatch"] >= 1.0
 
 
+# --- bitpacked slot fabric (ISSUE 4 acceptance) ------------------------------
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("engine", ["pallas_packed", "pallas_dense"])
+def test_pallas_service_parity_zero_host_routing(engine, monkeypatch):
+    """SolverService on the Pallas engines: staggered admission, results and
+    per-request stats bit-identical to sequential mac_solve, and ZERO
+    `route_rows_on_host` calls — every round is the device-resident stacked
+    slot-table dispatch (dispatch-counting test double)."""
+    calls = []
+    real = engine_mod.route_rows_on_host
+
+    def counting(*args, **kw):
+        calls.append(args)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(engine_mod, "route_rows_on_host", counting)
+    csps = generate_batch("model_rb", 3, n=10, hardness=1.0, seed=5)
+    svc = SolverService(engine=engine, initial_slots=2)
+    reqs = [svc.submit(c) for c in csps[:2]]
+    svc.step()  # first wave mid-flight when the last request arrives
+    reqs.append(svc.submit(csps[2]))
+    svc.run_until_idle()
+    for req, csp in zip(reqs, csps):
+        _assert_matches_sequential(req, csp, engine=engine)
+    assert calls == []  # device-resident slot table: zero host routing
+
+
+def test_slot_table_advertisement_routes_pool_kind():
+    """Engines advertise slot-table support; the pool kind follows the
+    advertisement, never a backend-name check."""
+    for name in ("einsum", "full", "pallas_dense", "pallas_packed"):
+        eng = get_engine(name)
+        assert eng.slot_table
+        assert eng.open_slot_pool(8, 4, 2).stacked
+    for name in ("ac3", "sharded"):
+        eng = get_engine(name)
+        assert not eng.slot_table
+        assert not eng.open_slot_pool(8, 4, 2).stacked
+
+
+@pytest.mark.parametrize(
+    "engine",
+    ["einsum", pytest.param("pallas_packed", marks=pytest.mark.pallas)],
+)
+def test_slot_pool_grow_preserves_resident_networks(engine):
+    """`SlotPool.grow` keeps installed networks intact (results identical
+    before/after), opens usable new slots, and refuses to shrink."""
+    csps = generate_batch("model_rb", 3, n=10, hardness=0.9, seed=3)
+    d = csps[0].dom.shape[1]
+    eng = get_engine(engine)
+    pool = eng.open_slot_pool(10, d, 2)
+    pool.install(0, csps[0])
+    pool.install(1, csps[1])
+    doms = np.stack([np.asarray(c.dom) for c in csps[:2]])
+    before = pool.enforce_rows(doms, slot_idx=np.array([0, 1]))
+    bytes_before = pool.resident_nbytes
+
+    pool.grow(4)
+    assert pool.capacity == 4
+    after = pool.enforce_rows(doms, slot_idx=np.array([0, 1]))
+    np.testing.assert_array_equal(np.asarray(before.dom), np.asarray(after.dom))
+    np.testing.assert_array_equal(
+        np.asarray(before.n_recurrences), np.asarray(after.n_recurrences)
+    )
+    assert pool.resident_nbytes >= bytes_before  # tables grew, networks intact
+
+    pool.install(3, csps[2])  # a newly grown slot is immediately usable
+    got = pool.enforce_rows(np.asarray(csps[2].dom)[None], slot_idx=np.array([3]))
+    ref = eng.prepare(csps[2]).enforce()
+    assert bool(np.asarray(got.consistent)[0]) == bool(np.asarray(ref.consistent))
+    if bool(np.asarray(ref.consistent)):
+        np.testing.assert_array_equal(np.asarray(got.dom)[0], np.asarray(ref.dom))
+
+    with pytest.raises(ValueError, match="cannot shrink"):
+        pool.grow(2)
+    with pytest.raises(ValueError, match="empty"):
+        pool.enforce_rows(doms[:1], slot_idx=np.array([2]))
+
+
 # --- prepared-network cache --------------------------------------------------
+
+
+def test_packed_byte_accounting_admits_8x_more_networks():
+    """The LRU budget counts the ENGINE's resident bytes: on the same budget,
+    packed-word accounting holds 8 resident networks where the logical
+    (unpacked bool) accounting holds exactly one."""
+    n, d = 16, 32  # d = 32: one full u32 word per variable, no packing waste
+    packed = get_engine("pallas_packed").network_nbytes(n, d)
+    unpacked = get_engine("einsum").network_nbytes(n, d)
+    budget = 8 * packed
+    assert budget // unpacked == 1  # unpacked accounting: ONE network fits
+
+    evicted = []
+    cache = PreparedNetworkCache(budget, on_evict=evicted.append)
+    for i in range(8):
+        entry, hit = cache.acquire(Bucket(n, d), f"fp{i}", packed, lambda i=i: i)
+        assert not hit
+        cache.release(entry)
+    assert len(cache) == 8 and cache.evictions == 0  # all 8 stay resident
+    assert cache.bytes_in_use <= cache.byte_budget
+
+
+def test_pinned_entries_survive_packed_accounting_pressure():
+    """Eviction under the packed byte budget still never touches pinned
+    entries: over-budget with everything pinned evicts nothing; releasing one
+    pin makes exactly that entry evictable."""
+    nbytes = get_engine("pallas_packed").network_nbytes(16, 32)
+    evicted = []
+    cache = PreparedNetworkCache(2 * nbytes, on_evict=evicted.append)
+    e0, _ = cache.acquire(Bucket(16, 32), "fp0", nbytes, lambda: 0)
+    e1, _ = cache.acquire(Bucket(16, 32), "fp1", nbytes, lambda: 1)
+    # both pinned; a third admission runs over budget rather than evict
+    e2, _ = cache.acquire(Bucket(16, 32), "fp2", nbytes, lambda: 2)
+    assert cache.evictions == 0 and cache.bytes_in_use > cache.byte_budget
+    cache.release(e0)  # fp0 unpinned -> the only legal victim
+    e3, _ = cache.acquire(Bucket(16, 32), "fp3", nbytes, lambda: 3)
+    assert [e.slot for e in evicted] == [0]
+    assert cache.lookup(Bucket(16, 32), "fp0") is None
+    assert all(
+        cache.lookup(Bucket(16, 32), fp) is not None for fp in ("fp1", "fp2", "fp3")
+    )
+    for e in (e1, e2, e3):
+        cache.release(e)
 
 
 def test_cache_hit_shares_resident_slot():
@@ -250,6 +376,8 @@ def test_requests_route_to_distinct_buckets():
     svc.run_until_idle()
     snap = svc.snapshot()
     assert len(snap["buckets"]) == 2
+    for info in snap["buckets"].values():
+        assert info["resident_nbytes"] > 0  # slot tables are device-resident
     for req in (small, big):
         assert req.status is RequestStatus.DONE
 
