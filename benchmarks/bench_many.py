@@ -1,11 +1,18 @@
 """Workload throughput: instances/second of `solve_many` vs sequential
-`mac_solve` -> the "many" section of BENCH_engines.json.
+`mac_solve` -> the "many" section of BENCH_engines.json, plus the host-traffic
+telemetry of the device-resident frontier -> the "frontier" section.
 
 The multi-instance amortization story (DESIGN.md §6) in one number: B
 independent Model-RB / coloring instances solved to completion, once as B
 sequential `mac_solve` calls and once as a single lockstep `solve_many`
-portfolio whose every round is one `enforce_many` dispatch. Results are
+portfolio whose every round is one fused frontier dispatch. Results are
 verified identical before timings are reported.
+
+The frontier section (DESIGN.md §8) records what each lockstep round actually
+moves across the host boundary: ``host_bytes_per_round`` (the O(R·d)
+metadata) against ``domain_bytes_per_round`` (the O(R·n·d) domains the
+pre-frontier protocol shipped both ways). `check_regression.py` gates the
+section — transferred-bytes growth is a regression like any latency one.
 
     PYTHONPATH=src python -m benchmarks.run --only many
 """
@@ -31,21 +38,22 @@ WORKLOADS = [
 
 
 def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
-                   seed: int = 0) -> dict:
+                   seed: int = 0) -> tuple:
     csps = generate_batch(family, count, seed=seed, **knobs)
 
     t0 = time.perf_counter()
     seq = [mac_solve(c, engine=engine)[0] for c in csps]
     seq_s = time.perf_counter() - t0
 
+    telemetry: dict = {}
     t0 = time.perf_counter()
-    sols, _ = solve_many(csps, engine=engine)
+    sols, _ = solve_many(csps, engine=engine, telemetry=telemetry)
     many_s = time.perf_counter() - t0
 
     if sols != seq:  # throughput numbers are meaningless if results diverge
         raise AssertionError(f"{family}: solve_many diverged from sequential mac_solve")
 
-    return {
+    many_row = {
         "family": family,
         "knobs": knobs,
         "count": count,
@@ -56,21 +64,52 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
         "sequential_instances_per_s": round(count / seq_s, 3),
         "many_instances_per_s": round(count / many_s, 3),
         "speedup": round(seq_s / many_s, 3),
+        "host_bytes_per_round": round(telemetry.get("host_bytes_per_round", 0.0), 1),
     }
+    frontier_row = None
+    if telemetry.get("device_frontier"):
+        frontier_row = {
+            "engine": engine,
+            "family": family,
+            "rounds": telemetry["rounds"],
+            "rows_dispatched": telemetry["rows_dispatched"],
+            "rows_per_round": round(
+                telemetry["rows_dispatched"] / max(telemetry["rounds"], 1), 2
+            ),
+            "rows_padded": telemetry["rows_padded"],
+            "host_bytes_per_round": round(telemetry["host_bytes_per_round"], 1),
+            "domain_bytes_per_round": round(telemetry["domain_bytes_per_round"], 1),
+            "metadata_fraction": round(
+                telemetry["host_bytes_per_round"]
+                / max(telemetry["domain_bytes_per_round"], 1e-9),
+                3,
+            ),
+            "root_bytes": telemetry["root_bytes"],
+            "extract_bytes": telemetry["extract_bytes"],
+        }
+    return many_row, frontier_row
 
 
 def main(out_path: Path = OUT_PATH) -> list:
-    rows = [
-        bench_workload(f, knobs, count, engine=engine)
-        for f, knobs, count, engine in WORKLOADS
-    ]
+    rows, frontier = [], []
+    for f, knobs, count, engine in WORKLOADS:
+        many_row, frontier_row = bench_workload(f, knobs, count, engine=engine)
+        rows.append(many_row)
+        if frontier_row is not None:
+            frontier.append(frontier_row)
     for r in rows:
         print(
             f"many,{r['engine']},{r['family']},{r['count']},"
             f"{r['sequential_instances_per_s']:.3f},{r['many_instances_per_s']:.3f},"
             f"{r['speedup']:.3f}"
         )
+    for r in frontier:
+        print(
+            f"frontier,{r['engine']},{r['family']},{r['rounds']},"
+            f"{r['host_bytes_per_round']:.1f},{r['domain_bytes_per_round']:.1f}"
+        )
     tracker.merge_section("many", rows, out_path)
+    tracker.merge_section("frontier", frontier, out_path)
     print(f"many: wrote {out_path}")
     return rows
 

@@ -20,7 +20,11 @@ The "many" section (solve_many workload throughput) is gated on
 (engine, family). The "service" section (bench_service trace replays) is
 gated the same way: p95 latency may not regress ``> tolerance``× and
 sustained throughput may not drop ``> tolerance``×, matched by
-(engine, trace). Exit code 0 = ok, 1 = regression/mismatch.
+(engine, trace). The "frontier" section (device-resident lockstep rounds,
+DESIGN.md §8) gates ``host_bytes_per_round``: a ``> tolerance``× growth in
+per-round host↔device metadata traffic — e.g. a domain tensor sneaking back
+onto the boundary — fails like any latency regression. Exit code 0 = ok,
+1 = regression/mismatch.
 """
 
 from __future__ import annotations
@@ -78,6 +82,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
         print(f"new  {key[0]:14s} {key[1]:34s} (no baseline — passes)")
     failures.extend(compare_many(baseline, fresh, tolerance))
     failures.extend(compare_service(baseline, fresh, tolerance))
+    failures.extend(compare_frontier(baseline, fresh, tolerance))
     return failures
 
 
@@ -111,6 +116,41 @@ def compare_many(baseline: dict, fresh: dict, tolerance: float) -> list:
             )
     for key in sorted(set(fresh_rows) - set(base_rows)):
         print(f"new  many:{key[0]:10s} {key[1]:34s} (no baseline — passes)")
+    return failures
+
+
+def index_frontier(report: dict) -> dict:
+    return {(r["engine"], r["family"]): r for r in report.get("frontier", [])}
+
+
+def compare_frontier(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Gate the frontier section: per-round host↔device metadata bytes may not
+    GROW more than ``tolerance``× (a domain tensor creeping back onto the host
+    boundary shows up here long before it shows up as latency). Same
+    missing/new-row policy as the other sections."""
+    failures = []
+    base_rows, fresh_rows = index_frontier(baseline), index_frontier(fresh)
+    eps = 1e-3
+    for key in sorted(base_rows):
+        engine, family = key
+        if key not in fresh_rows:
+            failures.append(f"frontier {engine} {family}: row missing from fresh run")
+            continue
+        b = base_rows[key]["host_bytes_per_round"]
+        f = fresh_rows[key]["host_bytes_per_round"]
+        ratio = (f + eps) / (b + eps)  # transferred-bytes GROWTH factor
+        status = "FAIL" if ratio > tolerance else "ok"
+        print(
+            f"{status:4s} frontier:{engine:7s} {family:34s} "
+            f"{b:10.1f} -> {f:10.1f} B/round ({ratio:.2f}x)"
+        )
+        if ratio > tolerance:
+            failures.append(
+                f"frontier {engine} {family}: host_bytes_per_round {b} -> {f} "
+                f"({ratio:.2f}x growth > {tolerance}x)"
+            )
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"new  frontier:{key[0]:7s} {key[1]:34s} (no baseline — passes)")
     return failures
 
 

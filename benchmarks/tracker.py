@@ -32,7 +32,7 @@ OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
 
 #: the sections check_regression gates; `--reset-sections` strips exactly
 #: these so a fresh CI run must rebuild every one of them from scratch
-GATED_SECTIONS = ("engines", "many", "service")
+GATED_SECTIONS = ("engines", "many", "service", "frontier")
 
 #: history never grows without bound — older runs roll off
 HISTORY_MAX = 200
@@ -78,6 +78,11 @@ def _summarize(key: str, value) -> Optional[dict]:
                     "p95_ms": r["p95_ms"],
                     "throughput_rps": r["throughput_rps"],
                 }
+                for r in value
+            }
+        if key == "frontier":
+            return {
+                f"{r['engine']}/{r['family']}": r["host_bytes_per_round"]
                 for r in value
             }
     except (KeyError, TypeError, ValueError):

@@ -23,7 +23,7 @@ from .rtac import (
 )
 from .ac3 import AC3Result, build_neighbours, enforce_ac3, assign_np
 from .brute import ac_closure_brute, count_solutions, solve_brute
-from .engine import Engine, PreparedMany, PreparedNetwork, SlotPool
+from .engine import Engine, FrontierTable, PreparedMany, PreparedNetwork, SlotPool
 from .search import (
     LockstepDriver,
     SearchStats,
@@ -59,6 +59,7 @@ __all__ = [
     "count_solutions",
     "solve_brute",
     "Engine",
+    "FrontierTable",
     "PreparedMany",
     "PreparedNetwork",
     "SlotPool",

@@ -33,9 +33,10 @@ This module is the only place that implements that contract.
 from __future__ import annotations
 
 import abc
+import bisect
 import functools
 import warnings
-from typing import Any, Callable, ClassVar, List, Optional, Sequence, Union
+from typing import Any, Callable, ClassVar, Dict, List, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,25 @@ Changed = Optional[Union[Array, np.ndarray]]
 
 def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def next_pow2(x: int) -> int:
+    """The next power of two ≥ x (x ≥ 1) — the ONE copy of the jit-shape
+    quantization every batching layer uses (frontier rounds, child frontiers,
+    admission buckets)."""
+    return 1 << (x - 1).bit_length()
+
+
+def pad_round_rows(arrays: Sequence[np.ndarray], r_p: int) -> List[np.ndarray]:
+    """Pad each (R, ...) array to ``r_p`` rows by replicating its LAST row —
+    enforcement is idempotent per element (and duplicate scatters write
+    identical values), so padded rows are inert. The ONE copy of the
+    round-padding idiom every dispatch path uses (the host stores and the
+    device `FrontierTable`)."""
+    r = arrays[0].shape[0]
+    if r_p == r:
+        return list(arrays)
+    return [np.concatenate([a, np.repeat(a[-1:], r_p - r, axis=0)]) for a in arrays]
 
 
 def padded_shape(n: int, d: int, n_block: int, d_mult: int):
@@ -356,12 +376,24 @@ class StackedSlotPool(SlotPool):
                 self._tables,
             )
 
-    def enforce_rows(self, doms, changed0: Changed = None, slot_idx=None):
-        idx = resolve_instance_idx(slot_idx, self.capacity, np.shape(doms)[0])
-        for j in np.unique(idx):
+    def require_installed(self, slot_idx) -> None:
+        """Fail loudly if any routed slot has no resident network (also the
+        `FrontierTable` round's ``check_net`` hook in the service)."""
+        for j in np.unique(np.asarray(slot_idx)):
             if self._nets[int(j)] is None:
                 raise ValueError(f"enforce_rows: slot {int(j)} is empty")
+
+    def enforce_rows(self, doms, changed0: Changed = None, slot_idx=None):
+        idx = resolve_instance_idx(slot_idx, self.capacity, np.shape(doms)[0])
+        self.require_installed(idx)
         return self._dispatch(self._tables, doms, changed0, idx)
+
+    @property
+    def tables(self):
+        """The live stacked slot tables — what a `FrontierTable` round reads
+        its networks from (re-read every dispatch, so installs and growth
+        between rounds are picked up)."""
+        return self._tables
 
     @property
     def resident_nbytes(self) -> int:
@@ -371,6 +403,333 @@ class StackedSlotPool(SlotPool):
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree_util.tree_leaves(self._tables)
         )
+
+
+# ---------------------------------------------------------------------------
+# FrontierTable — device-resident search frontiers (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+class FrontierRow(NamedTuple):
+    """One row of a frontier dispatch: create (and enforce) the child of
+    ``parent`` obtained by assigning ``var := val``; ``var < 0`` marks a root
+    row — ``parent`` already holds the root domain and is enforced in place.
+    ``assigned`` is the (n,) bool assignment mask of the *child* (the state its
+    own MRV selection must see); ``net`` routes the row to its constraint
+    network (a `PreparedMany` instance index or a `SlotPool` slot)."""
+
+    key: Any
+    parent: int
+    var: int
+    val: int
+    assigned: np.ndarray
+    net: int
+
+
+class RoundMeta(NamedTuple):
+    """What a frontier round ships back to the host: O(R·d) metadata, never an
+    (R, n, d) domain tensor. Domain sizes never ship at all — the on-device
+    MRV reduction consumes them where they live. ``handles[i]`` is row i's
+    closure handle (None where inconsistent — the row was freed);
+    ``branch_var``/``value_row`` are the MRV decision (garbage, and ignored,
+    for inconsistent or fully-assigned rows)."""
+
+    handles: List[Optional[int]]
+    consistent: np.ndarray  # (R,) bool
+    k: np.ndarray  # (R,) int32 — per-row recurrence counts
+    branch_var: np.ndarray  # (R,) int32
+    value_row: np.ndarray  # (R, d) bool — the branching variable's domain row
+
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1), static_argnames=("fix",))
+def _frontier_step(buf, abuf, networks, parent, var, val, dest, net_idx, *, fix):
+    """ONE fused round: gather parent closures AND assignment masks from the
+    resident frontier planes, assign + enforce (the engine's fused ``fix``),
+    scatter the children back, and reduce the per-row metadata — neither
+    domains nor assignment masks ever leave the device. ``buf``/``abuf`` are
+    donated: XLA updates the tables in place."""
+    doms = buf[parent]  # (R, n, d)
+    res = fix(networks, doms, var, val, net_idx)
+    buf = buf.at[dest].set(res.dom)
+    # the child's assignment mask: parent's mask plus the assigned variable
+    # (root rows, var < 0, inherit the parent mask unchanged) — maintained on
+    # device, bit-identical to the coroutine's host-side bookkeeping
+    n = buf.shape[1]
+    one_hot = (jnp.arange(n, dtype=var.dtype)[None, :] == jnp.maximum(var, 0)[:, None])
+    assigned = abuf[parent] | (one_hot & (var >= 0)[:, None])  # (R, n)
+    abuf = abuf.at[dest].set(assigned)
+    # MRV on device — identical to search._select_var: first argmin over
+    # unassigned domain sizes (assigned variables hidden behind a sentinel).
+    # The sizes are consumed HERE; they are never shipped to the host.
+    sizes = jnp.sum(res.dom, axis=-1).astype(jnp.int32)  # (R, n)
+    bvar = jnp.argmin(jnp.where(assigned, _INT32_MAX, sizes), axis=-1).astype(jnp.int32)
+    vrow = jnp.take_along_axis(res.dom, bvar[:, None, None], axis=1)[:, 0, :]  # (R, d)
+    return buf, abuf, res.consistent, res.n_recurrences, bvar, vrow
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _root_write(buf, abuf, row, dom, assigned):
+    """Donated single-row install (root domain + assignment-mask upload)."""
+    return buf.at[row].set(dom), abuf.at[row].set(assigned)
+
+
+@jax.jit
+def _row_read(buf, row):
+    """One-row gather (solution extraction) — jitted so the row index rides
+    as a device scalar instead of an implicit eager-slice transfer."""
+    return buf[row]
+
+
+def _buffer_zeros(shape):
+    """A zeroed device buffer. Allocation is not data motion: the fill value
+    is a scalar constant, so it is exempted from the transfer audit the
+    frontier runs under (`jax.transfer_guard("disallow")` stays clean)."""
+    with jax.transfer_guard("allow"):
+        return jnp.zeros(shape, jnp.bool_)
+
+
+class _PendingFrontierRound:
+    """Handle for one in-flight frontier dispatch: the metadata arrays are
+    still device futures (JAX async dispatch); ``resolve()`` fetches them —
+    the round's only device→host transfer — and frees inconsistent rows."""
+
+    def __init__(self, table: "FrontierTable", meta, dest: List[int], keys: List[Any], r: int):
+        self._table = table
+        self._meta = meta
+        self._dest = dest
+        self._keys = keys
+        self._r = r
+
+    def resolve(self) -> RoundMeta:
+        cons, k, bvar, vrow = jax.device_get(self._meta)
+        self._table._count_d2h(cons, k, bvar, vrow)
+        r = self._r
+        handles: List[Optional[int]] = []
+        for i, (key, row) in enumerate(zip(self._keys, self._dest)):
+            if bool(cons[i]):
+                handles.append(row)
+            else:  # a wiped-out child is never revisited — free its row now
+                self._table.free(key, row)
+                handles.append(None)
+        return RoundMeta(handles, cons[:r], k[:r], bvar[:r], vrow[:r])
+
+
+class FrontierTable:
+    """Device-resident search frontiers (DESIGN.md §8): a donated
+    ``(R_cap, n, d)`` buffer holding every live search node's AC closure for
+    the life of the search, plus the fused round dispatch over it.
+
+    The host never touches domains: ``begin`` uploads one root domain per
+    admitted search (the only O(n·d) host→device transfer a search ever
+    makes), ``dispatch`` launches the fused gather→assign→enforce→scatter→
+    reduce step (`_frontier_step`) whose host traffic is O(R·d) metadata
+    both ways, and ``extract`` fetches one closure exactly once, at solution
+    extraction. Rows are owned per search key: ``free`` returns a single row
+    (dead branch), ``release`` reclaims everything a retired search held.
+    Capacity grows by doubling (a device-side pad; O(log) reallocations).
+
+    All host↔device traffic is *explicit* (`jax.device_put`/`device_get`) and
+    metered — ``jax.transfer_guard("disallow")`` passes over a whole lockstep
+    run, which is exactly what `tests/test_frontier.py` asserts — and the
+    cumulative byte counters feed the ``frontier`` benchmark section.
+    """
+
+    pipelined: ClassVar[bool] = True
+
+    def __init__(
+        self,
+        n_vars: int,
+        dom_size: int,
+        networks: Callable[[], Any],
+        fix: Callable,
+        capacity: int = 64,
+        pad_rounds: bool = True,
+        check_net: Optional[Callable] = None,
+    ):
+        if capacity < 2:
+            raise ValueError("FrontierTable needs capacity >= 2")
+        #: optional per-round validation of the row→network routing (the
+        #: service passes the slot pool's occupancy check, so a stale route
+        #: fails loudly instead of solving against a zeroed network)
+        self._check_net = check_net
+        self.n_vars = n_vars
+        self.dom_size = dom_size
+        self._networks = networks  # () -> pytree; re-read every round, so slot
+        # installs and pool growth between rounds are picked up automatically
+        self._fix = fix
+        self._buf = _buffer_zeros((capacity, n_vars, dom_size))
+        self._abuf = _buffer_zeros((capacity, n_vars))  # assignment masks
+        self._free_rows: List[int] = list(range(capacity - 1, -1, -1))
+        self._rows_of: Dict[Any, set] = {}
+        self._net_of: Dict[Any, int] = {}
+        self._pad_rounds = pad_rounds
+        # Every XLA program is shaped on the round width, so a draining tail
+        # that walked back down the pow2 ladder would compile a fresh program
+        # per step — the dominant cost of a cold run. Rounds therefore pad to
+        # the nearest ALREADY-COMPILED width ≥ r (compiling a new pow2 width
+        # only when r exceeds them all): compiles happen on the way up only,
+        # and tails reuse the smallest adequate program. Padded rows replicate
+        # the last real row (idempotent, no extra fixpoint iterations), so a
+        # somewhat wider round costs linear width, strictly cheaper than a
+        # compile.
+        self._widths: List[int] = []
+        # transfer telemetry (metadata bytes; root/extract counted separately)
+        self.rounds = 0
+        self.rows_dispatched = 0  # real rows
+        self.rows_padded = 0  # rows actually shaped into the dispatches
+        self.rows_pow2 = 0  # plain next-pow2 rows (the pre-§8 round widths)
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.root_bytes = 0
+        self.extract_bytes = 0
+
+    @property
+    def capacity(self) -> int:
+        return self._buf.shape[0]
+
+    @property
+    def rows_live(self) -> int:
+        return self.capacity - len(self._free_rows)
+
+    @property
+    def host_bytes_per_round(self) -> float:
+        """Mean metadata bytes (both directions) one lockstep round moves —
+        the number the O(R·n·d)→O(R·d) claim is measured by."""
+        return (self.h2d_bytes + self.d2h_bytes) / max(self.rounds, 1)
+
+    @property
+    def domain_bytes_per_round(self) -> float:
+        """The counterfactual: what the pre-§8 protocol moved per round — the
+        full (R, n, d) bool domains, host→device and back, at the plain
+        next-pow2 round widths it actually padded to (NOT this table's
+        ratcheted widths — the comparison stays honest)."""
+        return 2.0 * self.rows_pow2 * self.n_vars * self.dom_size / max(self.rounds, 1)
+
+    def _count_d2h(self, *arrays) -> None:
+        self.d2h_bytes += sum(np.asarray(a).nbytes for a in arrays)
+
+    def _alloc(self, key) -> int:
+        if not self._free_rows:
+            old = self.capacity
+            # doubling is an on-device allocation, not data motion (the pad
+            # fill is a scalar constant) — exempt from the transfer audit
+            with jax.transfer_guard("allow"):
+                self._buf = jnp.pad(self._buf, ((0, old), (0, 0), (0, 0)))
+                self._abuf = jnp.pad(self._abuf, ((0, old), (0, 0)))
+            self._free_rows.extend(range(2 * old - 1, old - 1, -1))
+        row = self._free_rows.pop()
+        self._rows_of[key].add(row)
+        return row
+
+    # --- search lifecycle ---------------------------------------------------
+
+    def begin(self, key, net: int, root_dom: np.ndarray, assigned=None) -> int:
+        """Register a search and upload its root domain + initial assignment
+        mask into a fresh row — the ONE domain-sized host→device transfer of
+        the search's lifetime (``assigned`` marks bucket-padding variables as
+        born assigned; the mask lives on device from here on)."""
+        if key in self._rows_of:
+            raise ValueError(f"search key {key!r} already registered")
+        self._rows_of[key] = set()
+        self._net_of[key] = int(net)
+        row = self._alloc(key)
+        dom = jax.device_put(np.asarray(root_dom, dtype=bool))
+        if assigned is None:
+            assigned = np.zeros((self.n_vars,), dtype=bool)
+        mask = jax.device_put(np.asarray(assigned, dtype=bool))
+        self.root_bytes += int(dom.nbytes) + int(mask.nbytes)
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            self._buf, self._abuf = _root_write(
+                self._buf, self._abuf, jax.device_put(np.int32(row)), dom, mask
+            )
+        return row
+
+    def free(self, key, row: int) -> None:
+        """Return one row (a dead branch) to the free list."""
+        rows = self._rows_of.get(key)
+        if rows is not None and row in rows:
+            rows.discard(row)
+            self._free_rows.append(row)
+
+    def release(self, key) -> None:
+        """Reclaim every row a retired search still holds."""
+        self._free_rows.extend(self._rows_of.pop(key, ()))
+        self._net_of.pop(key, None)
+
+    def extract(self, key, row: int) -> np.ndarray:
+        """Fetch one closure — exactly once per search, at solution
+        extraction (an explicit device→host transfer)."""
+        dom = np.asarray(
+            jax.device_get(_row_read(self._buf, jax.device_put(np.int32(row))))
+        )
+        self.extract_bytes += int(dom.nbytes)
+        return dom
+
+    # --- the fused round ----------------------------------------------------
+
+    def dispatch(self, specs: Sequence[FrontierRow], net_idx=None) -> _PendingFrontierRound:
+        """Launch one fused round over ``specs`` (JAX async — returns
+        immediately; ``resolve()`` on the result blocks on the metadata).
+        ``net_idx`` optionally supplies the per-row network routing (the
+        driver's cached array); default derives it from the specs."""
+        r = len(specs)
+        if r == 0:
+            raise ValueError("dispatch needs at least one row")
+        if self._check_net is not None:
+            self._check_net(
+                net_idx
+                if net_idx is not None
+                else np.fromiter((self._net_of[s.key] for s in specs), np.int32, r)
+            )
+        dest = [s.parent if s.var < 0 else self._alloc(s.key) for s in specs]
+        parent = np.fromiter((s.parent for s in specs), np.int32, r)
+        var = np.fromiter((s.var for s in specs), np.int32, r)
+        val = np.fromiter((s.val for s in specs), np.int32, r)
+        if net_idx is None:
+            net_idx = np.fromiter((self._net_of[s.key] for s in specs), np.int32, r)
+        dest_arr = np.asarray(dest, np.int32)
+        if self._pad_rounds:
+            r_p = next((w for w in self._widths if w >= r), None)
+            if r_p is None:  # wider than anything compiled: a new pow2 width
+                r_p = next_pow2(r)
+                bisect.insort(self._widths, r_p)
+        else:
+            r_p = r
+        # replicate the LAST row verbatim (dest included): identical inputs
+        # write identical values, so the duplicate scatter is harmless and
+        # the jitted step reuses already-compiled widths
+        args = tuple(
+            jax.device_put(a)
+            for a in pad_round_rows(
+                (parent, var, val, dest_arr, np.asarray(net_idx, np.int32)), r_p
+            )
+        )
+        self.h2d_bytes += sum(int(a.nbytes) for a in args)
+        self.rounds += 1
+        self.rows_dispatched += r
+        self.rows_padded += r_p
+        self.rows_pow2 += next_pow2(r)
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            self._buf, self._abuf, *meta = _frontier_step(
+                self._buf, self._abuf, self._networks(), *args, fix=self._fix
+            )
+        return _PendingFrontierRound(self, tuple(meta), dest, [s.key for s in specs], r)
+
+
+def frontier_capacity(n_searches: int, n_vars: int, dom_size: int,
+                      cap: int = 8192) -> int:
+    """Initial `FrontierTable` rows for ``n_searches`` concurrent searches of
+    shape (n_vars, dom_size). A DFS level holds its node plus the unvisited
+    sibling closures, so ~(n + d) rows per search bounds the common case;
+    rows are n·d bools, so presizing is cheap while mid-run growth recompiles
+    the fused step for every live round shape. Growth still works — this is a
+    sizing heuristic, not a limit."""
+    return max(64, min(cap, next_pow2(n_searches * (n_vars + dom_size + 2))))
 
 
 def resolve_instance_idx(instance_idx, n_instances: int, n_rows: int) -> np.ndarray:
@@ -415,6 +774,12 @@ class Engine(abc.ABC):
     #: advertisement — engines declare the capability, callers never hardcode
     #: backend names. True requires ``_open_stacked_slot_pool``.
     slot_table: ClassVar[bool] = False
+    #: whether this engine supplies the fused frontier dispatch (DESIGN.md §8):
+    #: ``frontier_fix``/``frontier_networks`` back a device-resident
+    #: `FrontierTable`, so lockstep rounds gather parents, assign, enforce and
+    #: select on device and ship only O(R·d) metadata to the host. False =
+    #: the search layer's host-side store (domains in numpy, as for AC3).
+    device_frontier: ClassVar[bool] = False
 
     def network_nbytes(self, n_vars: int, dom_size: int) -> int:
         """Resident device bytes of ONE prepared network of caller shape
@@ -485,6 +850,36 @@ class Engine(abc.ABC):
         return route_rows_on_host(
             lambda j, dom, ch: self.enforce(nets[j], dom, ch), doms, changed0, idx
         )
+
+    # --- device-resident frontiers (DESIGN.md §8) ---------------------------
+
+    def frontier_fix(self) -> Callable:
+        """The fused assign+enforce core a `FrontierTable` round jits over:
+        a *traceable* ``fix(networks, doms, var, val, net_idx)`` →
+        `EnforceResult` applying the batched Alg. 2 assignment (``var < 0`` =
+        root row, no assignment, all-changed seed) and the stacked fixpoint.
+        MUST return a stable function object across calls — it keys the
+        frontier step's jit cache."""
+        raise NotImplementedError(
+            f"{type(self).__name__} advertises device_frontier="
+            f"{self.device_frontier} and does not implement frontier_fix"
+        )
+
+    def frontier_networks(self, prepared: PreparedMany) -> Any:
+        """The jax pytree of stacked networks ``frontier_fix`` consumes, for a
+        closed `prepare_many` workload (the open-world analogue is
+        `StackedSlotPool.tables`)."""
+        raise NotImplementedError
+
+    def open_frontier(self, networks: Callable[[], Any], n_vars: int,
+                      dom_size: int, capacity: int = 64,
+                      check_net: Optional[Callable] = None) -> "FrontierTable":
+        """A device-resident `FrontierTable` over this engine's fused frontier
+        dispatch. ``networks`` is a zero-arg callable returning the live
+        stacked-network pytree (re-read every round); ``check_net`` optionally
+        validates each round's row→network routing (e.g. slot occupancy)."""
+        return FrontierTable(n_vars, dom_size, networks, self.frontier_fix(),
+                             capacity=capacity, check_net=check_net)
 
     # --- open-world slots (continuous batching, DESIGN.md §7) ---------------
 

@@ -25,7 +25,7 @@ which is identical to the paper's all-ones-block encoding.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -315,6 +315,61 @@ def enforce_full_many(
     return jax.vmap(lambda c, m, d: fn(c, m, d))(
         cons[instance_idx], mask[instance_idx], dom
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused assign + revise — the frontier dispatch (DESIGN.md §8).
+# A search round no longer ships domains: the device gathers each row's parent
+# closure, applies the Alg. 2 assignment, seeds the Prop. 2 revision set, and
+# runs the stacked fixpoint — all inside ONE traced program.
+# ---------------------------------------------------------------------------
+
+
+def assign_and_seed(doms: Array, var: Array, val: Array) -> Tuple[Array, Array]:
+    """Batched Alg. 2 ``assign`` fused with the Prop. 2 revision seed.
+
+    Row i collapses ``dom(var[i])`` to ``{val[i]}`` and seeds
+    ``changed = one_hot(var[i])``; ``var[i] < 0`` marks a *root* row — the
+    domain is left untouched and every variable is seeded (a fresh network).
+    Returns (doms', changed) of shapes (R, n, d) / (R, n)."""
+    r, n, _ = doms.shape
+    is_root = var < 0
+    safe_var = jnp.maximum(var, 0)
+    assigned = jax.vmap(assign)(doms, safe_var, val)
+    doms = jnp.where(is_root[:, None, None], doms, assigned)
+    onehot = jnp.arange(n, dtype=var.dtype)[None, :] == safe_var[:, None]
+    changed = jnp.where(is_root[:, None], jnp.ones((r, n), jnp.bool_), onehot)
+    return doms, changed
+
+
+def assign_enforce_many(
+    networks,
+    doms: Array,  # (R, n, d) parent closures
+    var: Array,  # (R,) int32; < 0 = root row (no assignment, all-changed seed)
+    val: Array,  # (R,) int32
+    instance_idx: Array,  # (R,) int32
+    revise_fn: ReviseFn = _EINSUM_REVISE,
+) -> EnforceResult:
+    """Fused frontier dispatch for the contraction engines: assignment + seed
+    + the gather/vmap incremental fixpoint of `enforce_many_generic`, one
+    traced program (called from inside the jitted frontier step)."""
+    doms, changed = assign_and_seed(doms, var, val)
+    return enforce_many_generic(networks, doms, changed, instance_idx, revise_fn=revise_fn)
+
+
+def assign_enforce_full_many(
+    cons: Array,
+    mask: Array,
+    doms: Array,
+    var: Array,
+    val: Array,
+    instance_idx: Array,
+    support_fn: SupportFn = einsum_support,
+) -> EnforceResult:
+    """Fused frontier dispatch for the paper-faithful recurrence (Eq. 1 ignores
+    the revision seed — every step re-tests all pairs, exactly as published)."""
+    doms, _ = assign_and_seed(doms, var, val)
+    return enforce_full_many(cons, mask, doms, instance_idx, support_fn=support_fn)
 
 
 # CSP-level conveniences ------------------------------------------------------

@@ -7,6 +7,7 @@ support test for every (x, a) each step — kept as the fidelity baseline.
 
 from __future__ import annotations
 
+import functools
 from typing import List
 
 import jax.numpy as jnp
@@ -23,6 +24,28 @@ from repro.core.engine import (
 )
 from repro.core.rtac import EnforceResult, SupportFn, einsum_support
 from . import register
+
+
+@functools.lru_cache(maxsize=None)
+def _einsum_frontier_fix(revise_fn):
+    """Stable-identity fused frontier core (keys the frontier step's jit
+    cache): batched assign + seed + the gather/vmap incremental fixpoint."""
+
+    def fix(networks, doms, var, val, net_idx):
+        return rtac.assign_enforce_many(networks, doms, var, val, net_idx,
+                                        revise_fn=revise_fn)
+
+    return fix
+
+
+@functools.lru_cache(maxsize=None)
+def _full_frontier_fix(support_fn):
+    def fix(networks, doms, var, val, net_idx):
+        cons, mask = networks
+        return rtac.assign_enforce_full_many(cons, mask, doms, var, val, net_idx,
+                                             support_fn=support_fn)
+
+    return fix
 
 
 def _stack_networks(csps: List[CSP]):
@@ -68,6 +91,7 @@ class EinsumEngine(Engine):
     name = "einsum"
     stacked_many = True
     slot_table = True
+    device_frontier = True
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -107,6 +131,12 @@ class EinsumEngine(Engine):
 
         return _open_einsum_pool(self, n_vars, dom_size, capacity, dispatch)
 
+    def frontier_fix(self):
+        return _einsum_frontier_fix(self._revise_fn)
+
+    def frontier_networks(self, prepared: PreparedMany):
+        return prepared.payload
+
 
 @register
 class FullEngine(Engine):
@@ -116,6 +146,7 @@ class FullEngine(Engine):
     name = "full"
     stacked_many = True
     slot_table = True
+    device_frontier = True
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -149,3 +180,9 @@ class FullEngine(Engine):
             return rtac.enforce_full_many(cons, mask, doms, idx, support_fn=self.support_fn)
 
         return _open_einsum_pool(self, n_vars, dom_size, capacity, dispatch)
+
+    def frontier_fix(self):
+        return _full_frontier_fix(self.support_fn)
+
+    def frontier_networks(self, prepared: PreparedMany):
+        return prepared.payload

@@ -64,6 +64,7 @@ class _PallasEngine(Engine):
 
     stacked_many = True
     slot_table = True
+    device_frontier = True
 
     def __init__(self, block_rx: int = 8, block_ry: int = 8, interpret: bool = True):
         self.block_rx = block_rx
@@ -153,12 +154,25 @@ class _PallasEngine(Engine):
             dispatch=dispatch,
         )
 
+    # --- device-resident frontiers (DESIGN.md §8) ---------------------------
+
+    def frontier_fix(self):
+        """The `lru_cache`-d fused assign+revise entry from `kernels.ops`
+        (stable identity per (kernel, blocks, interpret) — keys the frontier
+        step's jit cache); kernel dims derive from the row shapes at trace
+        time, so one fix object serves every bucket."""
+        return self._frontier_fn(self.block_rx, self.block_ry, self.interpret)
+
+    def frontier_networks(self, prepared: PreparedMany):
+        return prepared.payload[0]
+
 
 @register
 class PallasDenseEngine(_PallasEngine):
     """Incremental RTAC with the dense uint8 Pallas revise kernel."""
 
     name = "pallas_dense"
+    _frontier_fn = staticmethod(ops._dense_frontier_fn)
 
     def _prepare_net(self, csp: CSP):
         network, _, (n_p, d_p) = ops.prepare_dense(csp, self.block_rx, self.block_ry)
@@ -193,6 +207,7 @@ class PallasPackedEngine(_PallasEngine):
     (8× less constraint traffic than uint8, 16× than bf16)."""
 
     name = "pallas_packed"
+    _frontier_fn = staticmethod(ops._packed_frontier_fn)
 
     def _prepare_net(self, csp: CSP):
         network, _, (n_p, d_p, w) = ops.prepare_packed(csp, self.block_rx, self.block_ry)

@@ -27,8 +27,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import rtac
 from repro.core.csp import CSP
-from repro.core.engine import pad_dom, pad_network
+from repro.core.engine import pad_dom, pad_network, padded_shape
 from . import bitpack_support, ref, rtac_support
 
 Array = jax.Array
@@ -171,6 +172,59 @@ def prepare_packed(csp: CSP, block_rx: int = 8, block_ry: int = 8):
 
     network, (n_p, d_p, w) = _cached("packed", csp, block_rx, block_ry, build)
     return network, pad_dom(csp.dom, n_p, d_p), (n_p, d_p, w)
+
+
+# ---------------------------------------------------------------------------
+# Fused assign + revise frontier entries (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _padded_seed(var, n: int, n_p: int):
+    """The Prop. 2 revision seed in padded coordinates: ``one_hot(var)`` for
+    assigned rows, all real variables for root rows (``var < 0``); padded
+    variables are never seeded (their domains never shrink). Identical to
+    `pad_changed` applied to the caller-coordinate seed."""
+    ar = jnp.arange(n_p, dtype=var.dtype)[None, :]
+    is_root = (var < 0)[:, None]
+    return jnp.where(is_root, ar < n, ar == jnp.maximum(var, 0)[:, None])
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_frontier_fn(block_rx: int, block_ry: int, interpret: bool):
+    """Fused assign+revise frontier dispatch for the dense u8 kernel: one
+    traced program pads R parent closures into kernel coordinates, applies the
+    batched Alg. 2 assignment (`rtac_support.assign_padded_rows`), and runs
+    the stacked-kernel fixpoint — the device never sees a host-built domain."""
+
+    def assign_enforce_rows(net_g, doms, var, val, idx):
+        r, n, d = doms.shape
+        n_p, d_p = padded_shape(n, d, max(block_rx, block_ry), D_MULT)
+        rows_fn = _dense_rows_fn(n_p, d_p, block_rx, block_ry, interpret)
+        dom_p = rtac_support.assign_padded_rows(pad_dom(doms, n_p, d_p), var, val)
+        ch_p = _padded_seed(var, n, n_p)
+        res = rtac.enforce_rows_generic(net_g, dom_p, ch_p, idx, revise_rows_fn=rows_fn)
+        return rtac.EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    return assign_enforce_rows
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_frontier_fn(block_rx: int, block_ry: int, interpret: bool):
+    """Fused assign+revise frontier dispatch for the bitpacked u32 kernel
+    (same shape as `_dense_frontier_fn`; the fixpoint packs row domains fresh
+    each recurrence, the networks ride gathered from the packed slot table)."""
+
+    def assign_enforce_rows(net_g, doms, var, val, idx):
+        r, n, d = doms.shape
+        n_p, d_p = padded_shape(n, d, max(block_rx, block_ry), D_MULT)
+        w = -(-d_p // 32)
+        rows_fn = _packed_rows_fn(n_p, d_p, w, block_rx, block_ry, interpret)
+        dom_p = rtac_support.assign_padded_rows(pad_dom(doms, n_p, d_p), var, val)
+        ch_p = _padded_seed(var, n, n_p)
+        res = rtac.enforce_rows_generic(net_g, dom_p, ch_p, idx, revise_rows_fn=rows_fn)
+        return rtac.EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    return assign_enforce_rows
 
 
 @functools.lru_cache(maxsize=None)

@@ -101,6 +101,22 @@ def dense_revise(
     )(cons2, dom_flat, changed, mask)
 
 
+def assign_padded_rows(dom_p: Array, var: Array, val: Array) -> Array:
+    """Batched Alg. 2 ``assign`` in kernel (padded) coordinates — the fused
+    front half of a frontier dispatch (DESIGN.md §8): row i's ``dom(var[i])``
+    collapses to ``{val[i]}`` before the stacked revise fixpoint runs, all in
+    one traced program, so a search round never materializes assigned domains
+    on the host. ``var[i] < 0`` marks a root row, left untouched. ``var``/
+    ``val`` index *caller* coordinates (< n, < d), so the padded tail — absent
+    values, unconstrained singleton variables — is preserved by construction.
+    """
+    r, _, d_p = dom_p.shape
+    safe_var = jnp.maximum(var, 0)
+    onehot = (jnp.arange(d_p, dtype=var.dtype)[None, :] == val[:, None]).astype(dom_p.dtype)
+    assigned = dom_p.at[jnp.arange(r), safe_var].set(onehot)
+    return jnp.where((var < 0)[:, None, None], dom_p, assigned)
+
+
 def _revise_stacked_kernel(cons_ref, dom_ref, changed_ref, mask_ref, out_ref, *, d: int):
     """Same body as `_revise_kernel`, with a leading instance axis: grid
     (r, i, j), every block a (1, ...) slice of row r's operands."""

@@ -22,7 +22,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core.csp import CSP
-from repro.core.engine import pad_dom
+from repro.core.engine import next_pow2, pad_dom
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -46,8 +46,7 @@ class Bucket:
 
 
 def _round_up_pow2(x: int, floor: int) -> int:
-    x = max(x, floor)
-    return 1 << (x - 1).bit_length()
+    return next_pow2(max(x, floor))
 
 
 def bucket_for(n: int, d: int, n_floor: int = 8, d_floor: int = 4) -> Bucket:

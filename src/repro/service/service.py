@@ -35,8 +35,14 @@ from enum import Enum
 from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.csp import CSP
-from repro.core.engine import Engine, SlotPool
-from repro.core.search import LockstepDriver, SearchStats, resolve_engine
+from repro.core.engine import (
+    Engine,
+    FrontierTable,
+    SlotPool,
+    StackedSlotPool,
+    frontier_capacity,
+)
+from repro.core.search import HostFrontierStore, LockstepDriver, SearchStats, resolve_engine
 from .buckets import Bucket, bucket_for, pad_csp
 from .cache import CacheEntry, PreparedNetworkCache, network_fingerprint
 from .metrics import ServiceMetrics
@@ -108,10 +114,11 @@ class _BucketRuntime:
     """One bucket's live state: slot pool, lockstep driver, slot free-list,
     and the in-flight requests (with their cache pins)."""
 
-    def __init__(self, bucket: Bucket, pool: SlotPool, driver: LockstepDriver):
+    def __init__(self, bucket: Bucket, pool: SlotPool, driver: LockstepDriver, store):
         self.bucket = bucket
         self.pool = pool
         self.driver = driver
+        self.store = store  # FrontierTable | HostFrontierStore
         self.free_slots: List[int] = list(range(pool.capacity))
         self.active: Dict[int, Tuple[SolveRequest, CacheEntry]] = {}
 
@@ -216,11 +223,13 @@ class SolverService:
         for rt in list(self._buckets.values()):
             if not rt.driver.has_work:
                 continue
-            rows = rt.driver.n_pending_rows
-            searches = len(rt.driver.active_keys)
-            t0 = time.perf_counter()
             finished = rt.driver.round()
-            self.metrics.record_round(rows, searches, time.perf_counter() - t0)
+            # rounds are pipelined: record the round the driver RESOLVED this
+            # step (if any) — its row count and dispatch-to-metadata seconds —
+            # not the one it just launched asynchronously
+            info = rt.driver.last_round
+            if info is not None:
+                self.metrics.record_round(info.rows, info.searches, info.seconds)
             for req_id, (sol, _stats) in finished.items():
                 req, _entry = rt.active[req_id]
                 self._retire(req, sol, RequestStatus.DONE)
@@ -241,16 +250,26 @@ class SolverService:
         rt = self._buckets.get(bucket)
         if rt is None:
             pool = self.engine.open_slot_pool(bucket.n_p, bucket.d_p, self._initial_slots)
-            driver = LockstepDriver(
-                pool.enforce_rows,
-                bucket.n_p,
-                count_unit=self.engine.count_unit,
-                # Engines ADVERTISE slot-table support (Engine.slot_table);
-                # round padding pays off exactly when the dispatch is one
-                # jit-shaped stacked program — never hardcode backend names.
-                pad_rounds=self.engine.slot_table,
-            )
-            rt = self._buckets[bucket] = _BucketRuntime(bucket, pool, driver)
+            # Engines ADVERTISE their capabilities (Engine.device_frontier /
+            # slot_table); the bucket wiring follows the advertisement, never
+            # backend names. Device-frontier engines dispatch every round
+            # against a resident FrontierTable fed by the pool's live slot
+            # tables (installs and growth between rounds are picked up);
+            # everything else routes through the host store over the pool.
+            if self.engine.device_frontier and isinstance(pool, StackedSlotPool):
+                store = self.engine.open_frontier(
+                    lambda: pool.tables, bucket.n_p, bucket.d_p,
+                    capacity=frontier_capacity(
+                        self._initial_slots, bucket.n_p, bucket.d_p
+                    ),
+                    check_net=pool.require_installed,
+                )
+            else:
+                store = HostFrontierStore(
+                    bucket.n_p, pool.enforce_rows, pad_rounds=self.engine.slot_table
+                )
+            driver = LockstepDriver(store, bucket.n_p, count_unit=self.engine.count_unit)
+            rt = self._buckets[bucket] = _BucketRuntime(bucket, pool, driver, store)
         return rt
 
     def _free_slot(self, entry: CacheEntry) -> None:
@@ -340,6 +359,16 @@ class SolverService:
                 "free_slots": len(rt.free_slots),
                 "active": len(rt.active),
                 "resident_nbytes": rt.pool.resident_nbytes,
+                **(
+                    {
+                        "device_frontier": True,
+                        "frontier_rows": rt.store.capacity,
+                        "frontier_rows_live": rt.store.rows_live,
+                        "host_bytes_per_round": rt.store.host_bytes_per_round,
+                    }
+                    if isinstance(rt.store, FrontierTable)
+                    else {"device_frontier": False}
+                ),
             }
             for b, rt in sorted(self._buckets.items())
         }
