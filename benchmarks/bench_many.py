@@ -65,6 +65,15 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
         "many_instances_per_s": round(count / many_s, 3),
         "speedup": round(seq_s / many_s, 3),
         "host_bytes_per_round": round(telemetry.get("host_bytes_per_round", 0.0), 1),
+        # the one-launch-per-round claim, visible in history: a fused
+        # in-kernel fixpoint bills 1 launch per lockstep round, the stepped
+        # while_loop bills the round's max recurrence depth
+        "launches": telemetry.get("launches", 0),
+        "launches_per_round": round(telemetry.get("launches_per_round", 0.0), 3),
+        "launches_per_solve": round(
+            telemetry.get("launches", 0) / max(count, 1), 3
+        ),
+        "fused_fixpoint": bool(telemetry.get("fused_fixpoint", False)),
     }
     frontier_row = None
     if telemetry.get("device_frontier"):
@@ -86,6 +95,12 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
             ),
             "root_bytes": telemetry["root_bytes"],
             "extract_bytes": telemetry["extract_bytes"],
+            "launches": telemetry["launches"],
+            "launches_per_round": round(telemetry["launches_per_round"], 3),
+            "rounds_per_s": round(
+                telemetry["rounds"] / max(telemetry["round_seconds_total"], 1e-9), 3
+            ),
+            "fused_fixpoint": bool(telemetry.get("fused_fixpoint", False)),
         }
     return many_row, frontier_row
 
@@ -106,7 +121,8 @@ def main(out_path: Path = OUT_PATH) -> list:
     for r in frontier:
         print(
             f"frontier,{r['engine']},{r['family']},{r['rounds']},"
-            f"{r['host_bytes_per_round']:.1f},{r['domain_bytes_per_round']:.1f}"
+            f"{r['host_bytes_per_round']:.1f},{r['domain_bytes_per_round']:.1f},"
+            f"launches/round={r['launches_per_round']:.2f}"
         )
     tracker.merge_section("many", rows, out_path)
     tracker.merge_section("frontier", frontier, out_path)

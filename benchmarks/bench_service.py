@@ -1,10 +1,16 @@
 """Service throughput + tail latency -> the "service" section of
 BENCH_engines.json.
 
-Replays a fixed seeded Poisson trace through `SolverService` (DESIGN.md §7)
-and records sustained instances/second, p50/p95/p99 latency, and dispatch
-occupancy. The replay clock fast-forwards idle gaps, so the numbers measure
-the service machinery (continuous batching, cache, buckets), not sleeps.
+Replays fixed seeded arrival traces through `SolverService` (DESIGN.md §7)
+and records sustained instances/second, p50/p95/p99 latency, dispatch
+occupancy, per-round kernel launches, and prepared-network cache hit-rate.
+The replay clock fast-forwards idle gaps, so the numbers measure the service
+machinery (continuous batching, cache, buckets), not sleeps.
+
+Two trace kinds: `poisson_trace` seeds every event uniquely (cache hit-rate
+pinned at 0 — the cold-traffic worst case), `dedup_trace` draws instances
+from a small recurring pool, so the prepared-network LRU actually serves hits
+and the recorded ``cache_hit_rate`` is meaningful.
 
     PYTHONPATH=src python -m benchmarks.run --only service
 """
@@ -14,36 +20,56 @@ from __future__ import annotations
 import time
 from pathlib import Path
 
-from repro.service import FastForwardClock, SolverService, poisson_trace, replay
+from repro.service import (
+    FastForwardClock,
+    SolverService,
+    dedup_trace,
+    poisson_trace,
+    replay,
+)
 from . import tracker
 from .tracker import OUT_PATH
 
-#: (engine, label, families, rate/s, duration s) — fixed seeds so runs are
-#: comparable. The pallas_packed replay exercises the device-resident packed
-#: slot table end-to-end (stacked kernels run interpret-mode on CPU, so its
-#: trace is deliberately small — the gated quantity is the trajectory, not the
-#: absolute number).
+#: (engine, label, kind, families, rate/s, duration s) — fixed seeds so runs
+#: are comparable. The pallas_packed replay exercises the device-resident
+#: packed slot table end-to-end (stacked kernels run interpret-mode on CPU, so
+#: its trace is deliberately small — the gated quantity is the trajectory, not
+#: the absolute number). The dedup trace repeats instances from a 3-seed pool,
+#: so the prepared-network LRU serves real hits.
 TRACES = [
-    ("einsum", "poisson_mixed_r12_d4", ["model_rb", "coloring_random"], 12.0, 4.0),
-    ("pallas_packed", "poisson_packed_r6_d2", ["model_rb"], 6.0, 2.0),
+    ("einsum", "poisson_mixed_r12_d4", "poisson",
+     ["model_rb", "coloring_random"], 12.0, 4.0),
+    ("einsum", "dedup_mixed_r12_d4", "dedup",
+     ["model_rb", "coloring_random"], 12.0, 4.0),
+    ("pallas_packed", "poisson_packed_r6_d2", "poisson", ["model_rb"], 6.0, 2.0),
 ]
 FULL_TRACES = TRACES + [
-    ("einsum", "poisson_mixed_r8_d20", ["model_rb", "coloring_random"], 8.0, 20.0),
+    ("einsum", "poisson_mixed_r8_d20", "poisson",
+     ["model_rb", "coloring_random"], 8.0, 20.0),
 ]
 
 
 def bench_trace(label: str, families, rate: float, duration: float,
-                engine: str = "einsum", seed: int = 0) -> dict:
-    events = poisson_trace(families, rate=rate, duration=duration, seed=seed)
+                engine: str = "einsum", seed: int = 0,
+                kind: str = "poisson") -> dict:
+    if kind == "dedup":
+        events = dedup_trace(
+            families, rate=rate, duration=duration, seed=seed, pool_size=3
+        )
+    else:
+        events = poisson_trace(families, rate=rate, duration=duration, seed=seed)
     clock = FastForwardClock()
     svc = SolverService(engine=engine, clock=clock)
     t0 = time.perf_counter()
     requests = replay(svc, events, clock)
     wall_s = time.perf_counter() - t0
     snap = svc.snapshot()
+    cache = snap["cache"]
+    lookups = cache.get("hits", 0) + cache.get("misses", 0)
     return {
         "trace": label,
         "engine": engine,
+        "kind": kind,
         "families": list(families),
         "rate": rate,
         "duration": duration,
@@ -57,20 +83,24 @@ def bench_trace(label: str, families, rate: float, duration: float,
         "p99_ms": snap["p99_ms"],
         "mean_rows_per_dispatch": snap["mean_rows_per_dispatch"],
         "rounds": snap["rounds"],
-        "cache": snap["cache"],
+        "launches": snap["launches"],
+        "mean_launches_per_round": snap["mean_launches_per_round"],
+        "cache": cache,
+        "cache_hit_rate": round(cache.get("hits", 0) / lookups, 4) if lookups else 0.0,
     }
 
 
 def main(quick: bool = True, out_path: Path = OUT_PATH) -> list:
     rows = [
-        bench_trace(label, fams, rate, dur, engine=engine)
-        for engine, label, fams, rate, dur in (TRACES if quick else FULL_TRACES)
+        bench_trace(label, fams, rate, dur, engine=engine, kind=kind)
+        for engine, label, kind, fams, rate, dur in (TRACES if quick else FULL_TRACES)
     ]
     for r in rows:
         print(
             f"service,{r['engine']},{r['trace']},{r['requests']},"
             f"{r['throughput_rps']:.3f},{r['p50_ms']:.3f},{r['p95_ms']:.3f},"
-            f"{r['p99_ms']:.3f},{r['mean_rows_per_dispatch']:.3f}"
+            f"{r['p99_ms']:.3f},{r['mean_rows_per_dispatch']:.3f},"
+            f"hit_rate={r['cache_hit_rate']:.3f}"
         )
     tracker.merge_section("service", rows, out_path)
     print(f"service: wrote {out_path}")

@@ -21,10 +21,11 @@ The "many" section (solve_many workload throughput) is gated on
 gated the same way: p95 latency may not regress ``> tolerance``× and
 sustained throughput may not drop ``> tolerance``×, matched by
 (engine, trace). The "frontier" section (device-resident lockstep rounds,
-DESIGN.md §8) gates ``host_bytes_per_round``: a ``> tolerance``× growth in
-per-round host↔device metadata traffic — e.g. a domain tensor sneaking back
-onto the boundary — fails like any latency regression. Exit code 0 = ok,
-1 = regression/mismatch.
+DESIGN.md §8) gates ``host_bytes_per_round`` AND ``metadata_fraction``: a
+``> tolerance``× growth in per-round host↔device traffic — absolute bytes, or
+the fraction of the counterfactual full-domain protocol — e.g. a domain
+tensor sneaking back onto the boundary — fails like any latency regression.
+Exit code 0 = ok, 1 = regression/mismatch.
 """
 
 from __future__ import annotations
@@ -124,10 +125,14 @@ def index_frontier(report: dict) -> dict:
 
 
 def compare_frontier(baseline: dict, fresh: dict, tolerance: float) -> list:
-    """Gate the frontier section: per-round host↔device metadata bytes may not
-    GROW more than ``tolerance``× (a domain tensor creeping back onto the host
-    boundary shows up here long before it shows up as latency). Same
-    missing/new-row policy as the other sections."""
+    """Gate the frontier section: per-round host↔device metadata traffic may
+    not GROW more than ``tolerance``× — neither the absolute
+    ``host_bytes_per_round`` nor the relative ``metadata_fraction`` (bytes as
+    a fraction of the counterfactual full-domain protocol; the fraction
+    catches a creep that absolute bytes hide when the workload also shrank).
+    A domain tensor creeping back onto the host boundary shows up here long
+    before it shows up as latency. Same missing/new-row policy as the other
+    sections."""
     failures = []
     base_rows, fresh_rows = index_frontier(baseline), index_frontier(fresh)
     eps = 1e-3
@@ -136,19 +141,33 @@ def compare_frontier(baseline: dict, fresh: dict, tolerance: float) -> list:
         if key not in fresh_rows:
             failures.append(f"frontier {engine} {family}: row missing from fresh run")
             continue
-        b = base_rows[key]["host_bytes_per_round"]
-        f = fresh_rows[key]["host_bytes_per_round"]
-        ratio = (f + eps) / (b + eps)  # transferred-bytes GROWTH factor
-        status = "FAIL" if ratio > tolerance else "ok"
-        print(
-            f"{status:4s} frontier:{engine:7s} {family:34s} "
-            f"{b:10.1f} -> {f:10.1f} B/round ({ratio:.2f}x)"
-        )
-        if ratio > tolerance:
-            failures.append(
-                f"frontier {engine} {family}: host_bytes_per_round {b} -> {f} "
-                f"({ratio:.2f}x growth > {tolerance}x)"
+        for metric, fmt, eps_m in (
+            ("host_bytes_per_round", "{:10.1f} -> {:10.1f} B/round", eps),
+            # fractions live in [0, 1]; a 1e-3 floor would swamp tiny
+            # baselines, so use a proportionally tiny quantum
+            ("metadata_fraction", "{:10.4f} -> {:10.4f} frac", 1e-6),
+        ):
+            b = base_rows[key].get(metric)
+            f = fresh_rows[key].get(metric)
+            if b is None:  # pre-gate baseline row: report once regenerated
+                continue
+            if f is None:
+                failures.append(
+                    f"frontier {engine} {family}: {metric} missing from fresh run"
+                )
+                continue
+            ratio = (f + eps_m) / (b + eps_m)  # GROWTH factor
+            status = "FAIL" if ratio > tolerance else "ok"
+            print(
+                f"{status:4s} frontier:{engine:7s} {family:34s} "
+                + fmt.format(b, f)
+                + f" ({ratio:.2f}x)"
             )
+            if ratio > tolerance:
+                failures.append(
+                    f"frontier {engine} {family}: {metric} {b} -> {f} "
+                    f"({ratio:.2f}x growth > {tolerance}x)"
+                )
     for key in sorted(set(fresh_rows) - set(base_rows)):
         print(f"new  frontier:{key[0]:7s} {key[1]:34s} (no baseline — passes)")
     return failures

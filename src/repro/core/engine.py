@@ -439,6 +439,9 @@ class RoundMeta(NamedTuple):
     k: np.ndarray  # (R,) int32 — per-row recurrence counts
     branch_var: np.ndarray  # (R,) int32
     value_row: np.ndarray  # (R, d) bool — the branching variable's domain row
+    #: kernel launches this round's enforcement cost: 1 on a fused in-kernel
+    #: fixpoint, the round's max recurrence depth on the stepped while_loop
+    launches: int = 1
 
 
 _INT32_MAX = np.iinfo(np.int32).max
@@ -514,7 +517,12 @@ class _PendingFrontierRound:
             else:  # a wiped-out child is never revisited — free its row now
                 self._table.free(key, row)
                 handles.append(None)
-        return RoundMeta(handles, cons[:r], k[:r], bvar[:r], vrow[:r])
+        # the round's launch bill: a fused fixpoint is ONE kernel regardless
+        # of recurrence depth; the stepped path launched one revise per
+        # iteration of the deepest row (XLA while_loop runs to the max k)
+        launches = 1 if self._table.fused_fixpoint else max(1, int(k[:r].max()))
+        self._table.launches += launches
+        return RoundMeta(handles, cons[:r], k[:r], bvar[:r], vrow[:r], launches)
 
 
 class FrontierTable:
@@ -548,6 +556,7 @@ class FrontierTable:
         capacity: int = 64,
         pad_rounds: bool = True,
         check_net: Optional[Callable] = None,
+        fused_fixpoint: bool = False,
     ):
         if capacity < 2:
             raise ValueError("FrontierTable needs capacity >= 2")
@@ -576,8 +585,12 @@ class FrontierTable:
         # somewhat wider round costs linear width, strictly cheaper than a
         # compile.
         self._widths: List[int] = []
+        #: whether ``fix`` runs the whole recurrence in one kernel launch
+        #: (drives the launch accounting in `_PendingFrontierRound.resolve`)
+        self.fused_fixpoint = bool(fused_fixpoint)
         # transfer telemetry (metadata bytes; root/extract counted separately)
         self.rounds = 0
+        self.launches = 0  # cumulative kernel launches across rounds
         self.rows_dispatched = 0  # real rows
         self.rows_padded = 0  # rows actually shaped into the dispatches
         self.rows_pow2 = 0  # plain next-pow2 rows (the pre-§8 round widths)
@@ -780,6 +793,11 @@ class Engine(abc.ABC):
     #: select on device and ship only O(R·d) metadata to the host. False =
     #: the search layer's host-side store (domains in numpy, as for AC3).
     device_frontier: ClassVar[bool] = False
+    #: whether enforcement runs its whole recurrence inside ONE kernel launch
+    #: (the fused in-kernel fixpoint). Engines with a runtime mode switch (the
+    #: Pallas backends' ``fixpoint=`` knob) shadow this with an instance
+    #: attribute; the frontier's launch accounting reads it either way.
+    fused_fixpoint: ClassVar[bool] = False
 
     def network_nbytes(self, n_vars: int, dom_size: int) -> int:
         """Resident device bytes of ONE prepared network of caller shape
@@ -879,7 +897,8 @@ class Engine(abc.ABC):
         stacked-network pytree (re-read every round); ``check_net`` optionally
         validates each round's row→network routing (e.g. slot occupancy)."""
         return FrontierTable(n_vars, dom_size, networks, self.frontier_fix(),
-                             capacity=capacity, check_net=check_net)
+                             capacity=capacity, check_net=check_net,
+                             fused_fixpoint=self.fused_fixpoint)
 
     # --- open-world slots (continuous batching, DESIGN.md §7) ---------------
 

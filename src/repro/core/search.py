@@ -91,6 +91,10 @@ class SearchStats:
     recurrences: List[int] = dataclasses.field(default_factory=list)
     revisions: List[int] = dataclasses.field(default_factory=list)
     enforce_seconds: List[float] = dataclasses.field(default_factory=list)
+    #: kernel launches billed to this search's enforcement rounds (a fused
+    #: in-kernel fixpoint bills 1 per round; the stepped path bills the
+    #: round's max recurrence depth). Host engines leave it 0.
+    launches: int = 0
     #: True iff the search stopped on its ``max_assignments`` budget — a
     #: (None, stats) result with ``exhausted=True`` is *inconclusive*, NOT a
     #: proof of unsatisfiability.
@@ -358,7 +362,11 @@ class HostFrontierStore:
             handles.append(h)
             bvar[i] = _select_var(dom_out[i], s.assigned)
             vrow[i] = dom_out[i][bvar[i]]
-        return _SyncRound(RoundMeta(handles, cons, k, bvar, vrow))
+        # host stores run the stepped recurrence: one enforcement dispatch per
+        # iteration of the deepest row (same launch model as the stepped
+        # device frontier — `core.engine._PendingFrontierRound.resolve`)
+        launches = max(1, int(k.max())) if k.size else 1
+        return _SyncRound(RoundMeta(handles, cons, k, bvar, vrow, launches))
 
 
 class _SingleSearchStore(HostFrontierStore):
@@ -410,6 +418,7 @@ def _drive_single(store: HostFrontierStore, root: int, gen: _MacGen,
             if collect_stats:
                 stats.enforce_seconds.append(time.perf_counter() - t0)
                 counts.extend(int(v) for v in res.k)
+                stats.launches += res.launches
             req = gen.send(_Reply(res.handles, res.consistent, res.branch_var,
                                   _value_lists(res)))
     except StopIteration as stop:
@@ -477,6 +486,7 @@ class RoundInfo(NamedTuple):
     rows: int
     searches: int
     seconds: float
+    launches: int = 1
 
 
 class LockstepDriver:
@@ -538,6 +548,7 @@ class LockstepDriver:
         self.last_round: Optional[RoundInfo] = None
         self.rounds = 0
         self.rows_dispatched = 0
+        self.launches = 0  # kernel-launch bill across resolved rounds
         self.round_seconds: List[float] = []
 
     # --- membership --------------------------------------------------------
@@ -676,7 +687,8 @@ class LockstepDriver:
         self.rounds += 1
         self.rows_dispatched += r
         self.round_seconds.append(dt)
-        self.last_round = RoundInfo(r, len(layout), dt)
+        self.launches += res.launches
+        self.last_round = RoundInfo(r, len(layout), dt, res.launches)
         values = _value_lists(res)
 
         off = 0
@@ -697,6 +709,7 @@ class LockstepDriver:
                     else stats.revisions
                 )
                 counts.extend(int(v) for v in res.k[rows])
+                stats.launches += res.launches
             reply = _Reply(
                 res.handles[rows], res.consistent[rows], res.branch_var[rows],
                 values[rows],
@@ -811,8 +824,11 @@ def solve_many(
         telemetry.update(
             engine=eng.name,
             device_frontier=bool(eng.device_frontier),
+            fused_fixpoint=bool(getattr(eng, "fused_fixpoint", False)),
             rounds=driver.rounds,
             rows_dispatched=driver.rows_dispatched,
+            launches=driver.launches,
+            launches_per_round=driver.launches / max(driver.rounds, 1),
             round_seconds_total=float(sum(driver.round_seconds)),
         )
         if isinstance(store, FrontierTable):

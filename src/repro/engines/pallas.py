@@ -27,6 +27,8 @@ the service cache budget admits proportionally more packed networks.
 
 from __future__ import annotations
 
+import os
+
 import jax.numpy as jnp
 
 from repro.core import rtac
@@ -66,10 +68,29 @@ class _PallasEngine(Engine):
     slot_table = True
     device_frontier = True
 
-    def __init__(self, block_rx: int = 8, block_ry: int = 8, interpret: bool = True):
+    def __init__(
+        self,
+        block_rx: int = 8,
+        block_ry: int = 8,
+        interpret: bool = True,
+        fixpoint: str | None = None,
+    ):
         self.block_rx = block_rx
         self.block_ry = block_ry
         self.interpret = interpret
+        # Recurrence placement: "fused" runs the whole fixpoint inside ONE
+        # kernel launch (domains pinned in VMEM, SMEM convergence flag);
+        # "stepped" is the original XLA while_loop around per-iteration revise
+        # launches — kept as the fallback and the parity oracle. Bit-identical
+        # by construction (tests/test_fused.py sweeps both).
+        if fixpoint is None:
+            fixpoint = os.environ.get("REPRO_PALLAS_FIXPOINT", "fused")
+        if fixpoint not in ("fused", "stepped"):
+            raise ValueError(
+                f"fixpoint must be 'fused' or 'stepped', got {fixpoint!r}"
+            )
+        self.fixpoint = fixpoint
+        self.fused_fixpoint = fixpoint == "fused"
 
     def _pad_shape(self, n: int, d: int):
         """The §2 padding the kernel shims apply for this engine's blocks —
@@ -121,10 +142,26 @@ class _PallasEngine(Engine):
         doms = jnp.asarray(doms)
         dom_p = pad_dom(doms, n_p, d_p)
         ch_p = pad_changed(as_changed(changed0), n, n_p, batch=doms.shape[:-2])
-        res = rtac.enforce_rows_generic(
-            tables, dom_p, ch_p, jnp.asarray(idx), revise_rows_fn=rows_fn
-        )
+        if self.fused_fixpoint:
+            self._maybe_autotune(dims, dom_p.shape[0])
+            res = ops.enforce_rows_fused(
+                tables, dom_p, ch_p, jnp.asarray(idx),
+                fixpoint_rows_fn=self._fixpoint_rows_fn(dims),
+            )
+        else:
+            res = rtac.enforce_rows_generic(
+                tables, dom_p, ch_p, jnp.asarray(idx), revise_rows_fn=rows_fn
+            )
         return EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    def _maybe_autotune(self, dims, r: int) -> None:
+        """Eager, env-gated (``REPRO_AUTOTUNE=1``) tune-on-first-use for the
+        bucket about to be dispatched — runs BEFORE the jitted fused program
+        traces, so the schedule it bakes is the tuned one."""
+        from repro.kernels import autotune
+
+        w = dims[2] if len(dims) > 2 else 0
+        autotune.maybe_tune(self._fixpoint_kind, dims[0], dims[1], w, r)
 
     def enforce_many(
         self, prepared: PreparedMany, doms, changed0=None, instance_idx=None
@@ -160,8 +197,10 @@ class _PallasEngine(Engine):
         """The `lru_cache`-d fused assign+revise entry from `kernels.ops`
         (stable identity per (kernel, blocks, interpret) — keys the frontier
         step's jit cache); kernel dims derive from the row shapes at trace
-        time, so one fix object serves every bucket."""
-        return self._frontier_fn(self.block_rx, self.block_ry, self.interpret)
+        time, so one fix object serves every bucket. In fused mode the whole
+        round's recurrence is one kernel launch."""
+        fn = self._frontier_fused_fn if self.fused_fixpoint else self._frontier_fn
+        return fn(self.block_rx, self.block_ry, self.interpret)
 
     def frontier_networks(self, prepared: PreparedMany):
         return prepared.payload[0]
@@ -173,6 +212,8 @@ class PallasDenseEngine(_PallasEngine):
 
     name = "pallas_dense"
     _frontier_fn = staticmethod(ops._dense_frontier_fn)
+    _frontier_fused_fn = staticmethod(ops._dense_frontier_fused_fn)
+    _fixpoint_kind = "dense"
 
     def _prepare_net(self, csp: CSP):
         network, _, (n_p, d_p) = ops.prepare_dense(csp, self.block_rx, self.block_ry)
@@ -188,6 +229,12 @@ class PallasDenseEngine(_PallasEngine):
     def _rows_fn(self, dims):
         n_p, d_p = dims
         return ops._dense_rows_fn(n_p, d_p, self.block_rx, self.block_ry, self.interpret)
+
+    def _fixpoint_rows_fn(self, dims):
+        n_p, d_p = dims
+        return ops._dense_fixpoint_rows_fn(
+            n_p, d_p, self.block_rx, self.block_ry, self.interpret
+        )
 
     def _empty_tables(self, dims, capacity: int):
         n_p, d_p = dims
@@ -208,6 +255,8 @@ class PallasPackedEngine(_PallasEngine):
 
     name = "pallas_packed"
     _frontier_fn = staticmethod(ops._packed_frontier_fn)
+    _frontier_fused_fn = staticmethod(ops._packed_frontier_fused_fn)
+    _fixpoint_kind = "packed"
 
     def _prepare_net(self, csp: CSP):
         network, _, (n_p, d_p, w) = ops.prepare_packed(csp, self.block_rx, self.block_ry)
@@ -226,6 +275,12 @@ class PallasPackedEngine(_PallasEngine):
     def _rows_fn(self, dims):
         n_p, d_p, w = dims
         return ops._packed_rows_fn(
+            n_p, d_p, w, self.block_rx, self.block_ry, self.interpret
+        )
+
+    def _fixpoint_rows_fn(self, dims):
+        n_p, d_p, w = dims
+        return ops._packed_fixpoint_rows_fn(
             n_p, d_p, w, self.block_rx, self.block_ry, self.interpret
         )
 

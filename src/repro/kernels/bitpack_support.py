@@ -29,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -159,3 +160,186 @@ def packed_revise_stacked(
         out_shape=jax.ShapeDtypeStruct((r, 1, nd), jnp.uint8),
         interpret=interpret,
     )(cons_g, dom_p, changed, mask)
+
+
+# ---------------------------------------------------------------------------
+# Fused in-kernel fixpoint, packed form (DESIGN.md §4): the recurrence loops
+# inside one pallas_call over the (n, W) uint32 domain WORDS — packing happens
+# once per iteration in VMEM, never in HBM, and the launch emits final
+# (unpacked) domains + per-row verdicts + recurrence counts.
+# ---------------------------------------------------------------------------
+
+
+def _fixpoint_packed_stacked_kernel(
+    cons_ref, dom_ref, changed_ref, mask_ref,
+    dom_out_ref, cons_out_ref, k_out_ref, flags_ref,
+    *, w: int, d: int, block_rx: int, block_ry: int, sweep: str,
+):
+    """Packed analogue of `rtac_support._fixpoint_stacked_kernel`: the loop
+    state is the (B, n·W) uint32 word planes; each sweep word-ANDs constraint
+    tiles against the domain words (support test = any word nonzero), packs
+    the violated bits back into words, and updates the words in place in VMEM.
+    ``flags_ref`` is the SMEM convergence flag + sweep counter; per-row
+    semantics are bit-identical to `rtac.enforce_rows_generic`."""
+    b = cons_ref.shape[0]
+    nd = cons_ref.shape[1]
+    n = nd // d
+    nx = n // block_rx
+    ny = n // block_ry
+    brd = block_rx * d
+    bcw = block_ry * w
+
+    m = mask_ref[...].astype(jnp.bool_)  # (B, n, n)
+    # little-endian bit weights, 2-D iota per the TPU lowering rules
+    bit = jax.lax.broadcasted_iota(jnp.uint32, (1, 32), 1).reshape(32)
+    weights = (jnp.uint32(1) << bit)  # (32,)
+
+    words0 = dom_ref[...].reshape(b, n * w)  # (B, n*W) uint32
+    ch0 = changed_ref[...].reshape(b, n).astype(jnp.bool_)
+    alive0 = jnp.any(words0.reshape(b, n, w) != 0, axis=-1)  # (B, n)
+    consistent0 = jnp.all(alive0, axis=-1)  # (B,)
+
+    flags_ref[0] = jnp.int32(1)  # convergence flag: 1 while any row active
+    flags_ref[1] = jnp.int32(0)  # in-kernel sweep counter
+
+    def tile(ix, iy, words, seed, acc):
+        """OR one (brd × bcw) tile's violations into the x-slab ``acc``."""
+        cs = pl.load(
+            cons_ref, (slice(None), pl.ds(ix * brd, brd), pl.ds(iy * bcw, bcw))
+        )  # (B, brd, bcw) uint32
+        dw = jax.lax.dynamic_slice(words, (0, iy * bcw), (b, bcw))
+        anded = cs & dw[:, None, :]
+        has_any = jnp.any(anded.reshape(b, brd, block_ry, w) != 0, axis=-1)
+        ms = jax.lax.dynamic_slice(
+            m, (0, ix * block_rx, iy * block_ry), (b, block_rx, block_ry)
+        )
+        m_rows = jnp.broadcast_to(
+            ms[:, :, None, :], (b, block_rx, d, block_ry)
+        ).reshape(b, brd, block_ry)
+        has = has_any | ~m_rows
+        sd = jax.lax.dynamic_slice(seed, (0, iy * block_ry), (b, block_ry))
+        return acc | jnp.any(sd[:, None, :] & ~has, axis=-1)  # (B, brd)
+
+    def revise(words, seed):
+        """Full blocked sweep -> violated (B, nd) bool (Jacobi: reads only the
+        pre-sweep word planes, so sweep order never changes results)."""
+        viol = jnp.zeros((b, nd), jnp.bool_)
+        if sweep == "xy":
+            def x_body(ix, v):
+                slab = jax.lax.fori_loop(
+                    0, ny, lambda iy, a: tile(ix, iy, words, seed, a),
+                    jnp.zeros((b, brd), jnp.bool_),
+                )
+                return jax.lax.dynamic_update_slice(v, slab, (0, ix * brd))
+
+            viol = jax.lax.fori_loop(0, nx, x_body, viol)
+        else:  # "yx"
+            def y_body(iy, v):
+                def x_body(ix, vv):
+                    old = jax.lax.dynamic_slice(vv, (0, ix * brd), (b, brd))
+                    return jax.lax.dynamic_update_slice(
+                        vv, tile(ix, iy, words, seed, old), (0, ix * brd)
+                    )
+
+                return jax.lax.fori_loop(0, nx, x_body, v)
+
+            viol = jax.lax.fori_loop(0, ny, y_body, viol)
+        return viol
+
+    def pack(bits):
+        """(B, nd) bool -> (B, n*W) uint32, little-endian (`ref.pack_bits_ref`)."""
+        padded = jnp.pad(bits.reshape(b, n, d), ((0, 0), (0, 0), (0, w * 32 - d)))
+        lanes = padded.reshape(b, n, w, 32).astype(jnp.uint32)
+        return jnp.sum(lanes * weights, axis=-1, dtype=jnp.uint32).reshape(b, n * w)
+
+    def cond(s):
+        words, ch, ok, k = s
+        return jnp.any(ok & jnp.any(ch, axis=-1))
+
+    def body(s):
+        words, ch, ok, k = s
+        active = ok & jnp.any(ch, axis=-1)  # (B,)
+        seed = ch & active[:, None]
+        viol_words = pack(revise(words, seed))
+        new_words = words & ~viol_words
+        changed = jnp.any(
+            (new_words != words).reshape(b, n, w), axis=-1
+        )  # (B, n)
+        ok2 = ok & jnp.all(
+            jnp.any(new_words.reshape(b, n, w) != 0, axis=-1), axis=-1
+        )
+        flags_ref[0] = jnp.any(ok2 & jnp.any(changed, axis=-1)).astype(jnp.int32)
+        flags_ref[1] = flags_ref[1] + 1
+        return (new_words, changed, ok2, k + active.astype(jnp.int32))
+
+    state = (
+        words0,
+        ch0 & consistent0[:, None],
+        consistent0,
+        jnp.zeros((b,), jnp.int32),
+    )
+    words_f, _, cons_f, k_f = jax.lax.while_loop(cond, body, state)
+    # unpack once, at the very end — callers get dense (B, nd) uint8 domains
+    bits = ((words_f.reshape(b, n, w)[..., None] >> bit) & 1).astype(jnp.uint8)
+    dom_out_ref[...] = bits.reshape(b, n, w * 32)[:, :, :d].reshape(b, 1, nd)
+    cons_out_ref[...] = cons_f[:, None].astype(jnp.uint8)
+    k_out_ref[...] = k_f[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "d", "w", "block_r", "block_rx", "block_ry", "sweep", "interpret"
+    ),
+)
+def packed_fixpoint_stacked(
+    cons_g: Array,  # (R, n*d, n*W) uint32 — row r's network, slot-table gathered
+    dom_words: Array,  # (R, 1, n*W) uint32 — packed, assignment already applied
+    changed: Array,  # (R, 1, n) uint8 — the Prop. 2 revision seed
+    mask: Array,  # (R, n, n) uint8
+    *,
+    d: int,
+    w: int,
+    block_r: int = 8,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    sweep: str = "xy",
+    interpret: bool = True,
+):
+    """R packed fixpoints in ONE launch: grid over instance blocks of
+    ``block_r`` rows, the whole recurrence over uint32 word planes inside each
+    cell. Returns (dom (R, 1, n·d) u8 — unpacked, consistent (R, 1) u8,
+    k (R, 1) i32) — per-row bit-identical to the stepped path."""
+    r, nd = cons_g.shape[0], cons_g.shape[1]
+    n = nd // d
+    assert cons_g.shape[2] == n * w
+    assert r % block_r == 0, (r, block_r)
+    assert n % block_rx == 0 and n % block_ry == 0, (n, block_rx, block_ry)
+    assert sweep in ("xy", "yx"), sweep
+    grid = (r // block_r,)
+
+    return pl.pallas_call(
+        functools.partial(
+            _fixpoint_packed_stacked_kernel,
+            w=w, d=d, block_rx=block_rx, block_ry=block_ry, sweep=sweep,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, nd, n * w), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, 1, n * w), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, 1, n), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, n, n), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, 1, nd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, 1), lambda g: (g, 0)),
+            pl.BlockSpec((block_r, 1), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 1, nd), jnp.uint8),
+            jax.ShapeDtypeStruct((r, 1), jnp.uint8),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(cons_g, dom_words, changed, mask)

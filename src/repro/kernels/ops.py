@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.core import rtac
 from repro.core.csp import CSP
 from repro.core.engine import pad_dom, pad_network, padded_shape
-from . import bitpack_support, ref, rtac_support
+from . import autotune, bitpack_support, ref, rtac_support
 
 Array = jax.Array
 
@@ -253,3 +253,139 @@ def _packed_rows_fn(
         return viol.reshape(r, n_p, d_p).astype(jnp.bool_)
 
     return revise_rows
+
+
+# ---------------------------------------------------------------------------
+# Fused in-kernel fixpoint (one launch per round; DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def _fixpoint_schedule(
+    kind: str, n_p: int, d_p: int, w: int, r: int, block_rx: int, block_ry: int
+):
+    """Resolve the fused-kernel schedule at trace time. R is static inside a
+    traced program, so this is a plain in-memory lookup (`autotune.get_config`
+    never times anything); untuned buckets run the engine defaults. The jitted
+    program bakes the schedule it sees — tune before first dispatch."""
+    cfg = autotune.get_config(kind, n_p, d_p, w, r, block_rx, block_ry)
+    return autotune.TuneConfig(
+        autotune.effective_block_r(cfg.block_r, r),
+        cfg.block_rx, cfg.block_ry, cfg.sweep,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_fixpoint_rows_fn(
+    n_p: int, d_p: int, block_rx: int, block_ry: int, interpret: bool
+):
+    """Stacked one-launch fixpoint for the dense u8 kernel. Same signature as
+    `rtac.enforce_rows_generic` (net_g, dom_p, ch_p -> EnforceResult in padded
+    coordinates) so engines can swap it for the stepped path wholesale."""
+
+    def fixpoint_rows(net_g, doms, changed):
+        cons_g, mask_g = net_g
+        r = doms.shape[0]
+        cfg = _fixpoint_schedule("dense", n_p, d_p, 0, r, block_rx, block_ry)
+        dom_f, cons_f, k_f = rtac_support.dense_fixpoint_stacked(
+            cons_g,
+            doms.astype(jnp.uint8).reshape(r, 1, n_p * d_p),
+            changed.astype(jnp.uint8).reshape(r, 1, n_p),
+            mask_g,
+            d=d_p,
+            block_r=cfg.block_r,
+            block_rx=cfg.block_rx,
+            block_ry=cfg.block_ry,
+            sweep=cfg.sweep,
+            interpret=interpret,
+        )
+        return rtac.EnforceResult(
+            dom_f.reshape(r, n_p, d_p).astype(jnp.bool_),
+            cons_f[:, 0].astype(jnp.bool_),
+            k_f[:, 0],
+        )
+
+    return fixpoint_rows
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_fixpoint_rows_fn(
+    n_p: int, d_p: int, w: int, block_rx: int, block_ry: int, interpret: bool
+):
+    """Stacked one-launch fixpoint for the bitpacked u32 kernel: row domains
+    are packed ONCE on entry and stay (n, W) u32 words in VMEM across every
+    in-kernel recurrence (the stepped path re-packs each iteration)."""
+
+    def fixpoint_rows(net_g, doms, changed):
+        cons_g, mask_g = net_g
+        r = doms.shape[0]
+        cfg = _fixpoint_schedule("packed", n_p, d_p, w, r, block_rx, block_ry)
+        dom_pk = ref.pack_bits_ref(doms).reshape(r, 1, n_p * w)
+        dom_f, cons_f, k_f = bitpack_support.packed_fixpoint_stacked(
+            cons_g,
+            dom_pk,
+            changed.astype(jnp.uint8).reshape(r, 1, n_p),
+            mask_g,
+            d=d_p,
+            w=w,
+            block_r=cfg.block_r,
+            block_rx=cfg.block_rx,
+            block_ry=cfg.block_ry,
+            sweep=cfg.sweep,
+            interpret=interpret,
+        )
+        return rtac.EnforceResult(
+            dom_f.reshape(r, n_p, d_p).astype(jnp.bool_),
+            cons_f[:, 0].astype(jnp.bool_),
+            k_f[:, 0],
+        )
+
+    return fixpoint_rows
+
+
+@functools.partial(jax.jit, static_argnames=("fixpoint_rows_fn",))
+def enforce_rows_fused(networks, dom, changed0, instance_idx, fixpoint_rows_fn):
+    """Fused-kernel counterpart of `rtac.enforce_rows_generic`: gather each
+    row's network from the stacked tables, then ONE kernel launch runs the
+    whole recurrence. Inputs/outputs match `enforce_rows_generic` exactly so
+    `engines.pallas` routes between them with a flag."""
+    net_g = jax.tree_util.tree_map(lambda t: t[instance_idx], networks)
+    return fixpoint_rows_fn(net_g, dom, changed0)
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_frontier_fused_fn(block_rx: int, block_ry: int, interpret: bool):
+    """One-launch-per-round frontier dispatch for the dense u8 kernel: pad,
+    batched Alg. 2 assignment, seed — then a single fused fixpoint launch in
+    place of `_dense_frontier_fn`'s stepped while_loop."""
+
+    def assign_enforce_rows(net_g, doms, var, val, idx):
+        r, n, d = doms.shape
+        n_p, d_p = padded_shape(n, d, max(block_rx, block_ry), D_MULT)
+        rows_fn = _dense_fixpoint_rows_fn(n_p, d_p, block_rx, block_ry, interpret)
+        dom_p = rtac_support.assign_padded_rows(pad_dom(doms, n_p, d_p), var, val)
+        ch_p = _padded_seed(var, n, n_p)
+        net_rows = jax.tree_util.tree_map(lambda t: t[idx], net_g)
+        res = rows_fn(net_rows, dom_p, ch_p)
+        return rtac.EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    return assign_enforce_rows
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_frontier_fused_fn(block_rx: int, block_ry: int, interpret: bool):
+    """One-launch-per-round frontier dispatch for the bitpacked u32 kernel
+    (shape-identical to `_packed_frontier_fn`; domains pack once on entry and
+    the recurrence runs on u32 word planes pinned in VMEM)."""
+
+    def assign_enforce_rows(net_g, doms, var, val, idx):
+        r, n, d = doms.shape
+        n_p, d_p = padded_shape(n, d, max(block_rx, block_ry), D_MULT)
+        w = -(-d_p // 32)
+        rows_fn = _packed_fixpoint_rows_fn(n_p, d_p, w, block_rx, block_ry, interpret)
+        dom_p = rtac_support.assign_padded_rows(pad_dom(doms, n_p, d_p), var, val)
+        ch_p = _padded_seed(var, n, n_p)
+        net_rows = jax.tree_util.tree_map(lambda t: t[idx], net_g)
+        res = rows_fn(net_rows, dom_p, ch_p)
+        return rtac.EnforceResult(res.dom[:, :n, :d], res.consistent, res.n_recurrences)
+
+    return assign_enforce_rows

@@ -33,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -177,5 +178,181 @@ def dense_revise_stacked(
         ],
         out_specs=pl.BlockSpec((1, 1, br), lambda r, i, j: (r, 0, i)),
         out_shape=jax.ShapeDtypeStruct((r, 1, nd), jnp.uint8),
+        interpret=interpret,
+    )(cons_g, dom_flat, changed, mask)
+
+
+# ---------------------------------------------------------------------------
+# Fused in-kernel fixpoint (DESIGN.md §4): the WHOLE AC recurrence runs inside
+# one pallas_call — the (n, d) domain planes stay pinned in VMEM across
+# iterations instead of round-tripping HBM once per recurrence.
+# ---------------------------------------------------------------------------
+
+
+def _fixpoint_stacked_kernel(
+    cons_ref, dom_ref, changed_ref, mask_ref,
+    dom_out_ref, cons_out_ref, k_out_ref, flags_ref,
+    *, d: int, block_rx: int, block_ry: int, sweep: str,
+):
+    """One grid cell = ``block_r`` instances run to their AC fixpoint.
+
+    The recurrence is a `jax.lax.while_loop` INSIDE the kernel body carrying
+    (dom, changed, consistent, k); per-row semantics are bit-identical to
+    `rtac.enforce_rows_generic` (active masking freezes converged/wiped-out
+    rows, ``k`` counts only active steps). Each revise sweep walks the
+    constraint block in (block_rx·d × block_ry·d) tiles; ``sweep`` picks the
+    loop-nest order ("xy" = x-outer, "yx" = y-outer). Both orders OR into the
+    same violated accumulator against the PRE-sweep domain (Jacobi), so the
+    schedule knob never changes results — only VMEM access order.
+
+    ``flags_ref`` is SMEM scalar memory: [0] the convergence flag (1 while any
+    row in the cell is still active), [1] the sweep counter. The per-row
+    verdicts and recurrence counts are emitted as kernel outputs.
+    """
+    b = cons_ref.shape[0]
+    nd = cons_ref.shape[1]
+    n = nd // d
+    nx = n // block_rx
+    ny = n // block_ry
+    brd = block_rx * d
+    bcd = block_ry * d
+
+    m = mask_ref[...].astype(jnp.bool_)  # (B, n, n)
+
+    dom0 = dom_ref[...].reshape(b, nd)  # (B, nd) uint8
+    ch0 = changed_ref[...].reshape(b, n).astype(jnp.bool_)
+    consistent0 = ~jnp.any(
+        jnp.sum(dom0.reshape(b, n, d).astype(jnp.int32), axis=-1) == 0, axis=-1
+    )  # (B,)
+
+    flags_ref[0] = jnp.int32(1)  # convergence flag: 1 while any row active
+    flags_ref[1] = jnp.int32(0)  # in-kernel sweep counter
+
+    def tile(ix, iy, dom, seed, acc):
+        """OR one (brd × bcd) tile's violations into the x-slab ``acc``."""
+        cs = pl.load(
+            cons_ref, (slice(None), pl.ds(ix * brd, brd), pl.ds(iy * bcd, bcd))
+        )  # (B, brd, bcd)
+        dv = jax.lax.dynamic_slice(dom, (0, iy * bcd), (b, bcd))
+        sup = (cs & dv[:, None, :]).astype(jnp.int32)
+        cnt = jnp.sum(sup.reshape(b, brd, block_ry, d), axis=-1)  # (B, brd, RY)
+        ms = jax.lax.dynamic_slice(
+            m, (0, ix * block_rx, iy * block_ry), (b, block_rx, block_ry)
+        )
+        m_rows = jnp.broadcast_to(
+            ms[:, :, None, :], (b, block_rx, d, block_ry)
+        ).reshape(b, brd, block_ry)
+        has = (cnt > 0) | ~m_rows
+        sd = jax.lax.dynamic_slice(seed, (0, iy * block_ry), (b, block_ry))
+        return acc | jnp.any(sd[:, None, :] & ~has, axis=-1)  # (B, brd)
+
+    def revise(dom, seed):
+        """Full blocked sweep -> violated (B, nd) bool (Jacobi: reads only the
+        pre-sweep ``dom``, so "xy" and "yx" orders are bit-identical)."""
+        viol = jnp.zeros((b, nd), jnp.bool_)
+        if sweep == "xy":
+            def x_body(ix, v):
+                slab = jax.lax.fori_loop(
+                    0, ny, lambda iy, a: tile(ix, iy, dom, seed, a),
+                    jnp.zeros((b, brd), jnp.bool_),
+                )
+                return jax.lax.dynamic_update_slice(v, slab, (0, ix * brd))
+
+            viol = jax.lax.fori_loop(0, nx, x_body, viol)
+        else:  # "yx"
+            def y_body(iy, v):
+                def x_body(ix, vv):
+                    old = jax.lax.dynamic_slice(vv, (0, ix * brd), (b, brd))
+                    return jax.lax.dynamic_update_slice(
+                        vv, tile(ix, iy, dom, seed, old), (0, ix * brd)
+                    )
+
+                return jax.lax.fori_loop(0, nx, x_body, v)
+
+            viol = jax.lax.fori_loop(0, ny, y_body, viol)
+        return viol
+
+    def cond(s):
+        dom, ch, ok, k = s
+        return jnp.any(ok & jnp.any(ch, axis=-1))
+
+    def body(s):
+        dom, ch, ok, k = s
+        active = ok & jnp.any(ch, axis=-1)  # (B,)
+        seed = ch & active[:, None]
+        viol = revise(dom, seed)
+        new_dom = dom & ~viol.astype(jnp.uint8)
+        changed = jnp.any((new_dom != dom).reshape(b, n, d), axis=-1)
+        ok2 = ok & ~jnp.any(
+            jnp.sum(new_dom.reshape(b, n, d).astype(jnp.int32), axis=-1) == 0,
+            axis=-1,
+        )
+        flags_ref[0] = jnp.any(ok2 & jnp.any(changed, axis=-1)).astype(jnp.int32)
+        flags_ref[1] = flags_ref[1] + 1
+        return (new_dom, changed, ok2, k + active.astype(jnp.int32))
+
+    state = (
+        dom0,
+        ch0 & consistent0[:, None],
+        consistent0,
+        jnp.zeros((b,), jnp.int32),
+    )
+    dom_f, _, cons_f, k_f = jax.lax.while_loop(cond, body, state)
+    dom_out_ref[...] = dom_f.reshape(b, 1, nd)
+    cons_out_ref[...] = cons_f[:, None].astype(jnp.uint8)
+    k_out_ref[...] = k_f[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "block_r", "block_rx", "block_ry", "sweep", "interpret"),
+)
+def dense_fixpoint_stacked(
+    cons_g: Array,  # (R, n*d, n*d) uint8 — row r's network, slot-table gathered
+    dom_flat: Array,  # (R, 1, n*d) uint8 — assignment already applied
+    changed: Array,  # (R, 1, n) uint8 — the Prop. 2 revision seed
+    mask: Array,  # (R, n, n) uint8
+    *,
+    d: int,
+    block_r: int = 8,
+    block_rx: int = 8,
+    block_ry: int = 8,
+    sweep: str = "xy",
+    interpret: bool = True,
+):
+    """R dense fixpoints in ONE launch: grid over instance blocks of
+    ``block_r`` rows, the whole recurrence inside each cell. Returns
+    (dom (R, 1, n·d) u8, consistent (R, 1) u8, k (R, 1) i32) — per-row
+    bit-identical to the stepped `rtac.enforce_rows_generic` path."""
+    r, nd = cons_g.shape[0], cons_g.shape[1]
+    n = nd // d
+    assert r % block_r == 0, (r, block_r)
+    assert n % block_rx == 0 and n % block_ry == 0, (n, block_rx, block_ry)
+    assert sweep in ("xy", "yx"), sweep
+    grid = (r // block_r,)
+
+    return pl.pallas_call(
+        functools.partial(
+            _fixpoint_stacked_kernel,
+            d=d, block_rx=block_rx, block_ry=block_ry, sweep=sweep,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, nd, nd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, 1, nd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, 1, n), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, n, n), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, 1, nd), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_r, 1), lambda g: (g, 0)),
+            pl.BlockSpec((block_r, 1), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 1, nd), jnp.uint8),
+            jax.ShapeDtypeStruct((r, 1), jnp.uint8),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
         interpret=interpret,
     )(cons_g, dom_flat, changed, mask)

@@ -21,6 +21,7 @@ from .trace import (
     DEFAULT_VARIANTS,
     FastForwardClock,
     TraceEvent,
+    dedup_trace,
     poisson_trace,
     replay,
 )
@@ -39,6 +40,7 @@ __all__ = [
     "DEFAULT_VARIANTS",
     "FastForwardClock",
     "TraceEvent",
+    "dedup_trace",
     "poisson_trace",
     "replay",
 ]

@@ -39,6 +39,7 @@ class ServiceMetrics:
         self.n_cancelled = 0
         self.n_rounds = 0
         self.rows_dispatched = 0
+        self.launches = 0
         self.first_submit_t: Optional[float] = None
         self.last_finish_t: Optional[float] = None
         # bounded recent-window samples
@@ -47,6 +48,7 @@ class ServiceMetrics:
         self.round_rows: Deque[int] = deque(maxlen=window)
         self.round_searches: Deque[int] = deque(maxlen=window)
         self.round_seconds: Deque[float] = deque(maxlen=window)
+        self.round_launches: Deque[int] = deque(maxlen=window)
 
     # --- recording ----------------------------------------------------------
 
@@ -68,12 +70,16 @@ class ServiceMetrics:
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depths.append(depth)
 
-    def record_round(self, rows: int, searches: int, seconds: float) -> None:
+    def record_round(
+        self, rows: int, searches: int, seconds: float, launches: int = 1
+    ) -> None:
         self.n_rounds += 1
         self.rows_dispatched += rows
+        self.launches += launches
         self.round_rows.append(rows)
         self.round_searches.append(searches)
         self.round_seconds.append(seconds)
+        self.round_launches.append(launches)
 
     # --- reduction ----------------------------------------------------------
 
@@ -111,6 +117,8 @@ class ServiceMetrics:
             "mean_rows_per_dispatch": round(
                 self.rows_dispatched / self.n_rounds if self.n_rounds else 0.0, 3
             ),
+            "launches": self.launches,
+            "mean_launches_per_round": round(_mean(self.round_launches), 3),
             "mean_searches_per_round": round(_mean(self.round_searches), 3),
             "mean_queue_depth": round(_mean(self.queue_depths), 3),
             "max_queue_depth": int(max(self.queue_depths, default=0)),

@@ -229,7 +229,9 @@ class SolverService:
             # not the one it just launched asynchronously
             info = rt.driver.last_round
             if info is not None:
-                self.metrics.record_round(info.rows, info.searches, info.seconds)
+                self.metrics.record_round(
+                    info.rows, info.searches, info.seconds, info.launches
+                )
             for req_id, (sol, _stats) in finished.items():
                 req, _entry = rt.active[req_id]
                 self._retire(req, sol, RequestStatus.DONE)

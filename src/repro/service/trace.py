@@ -92,6 +92,42 @@ def poisson_trace(
     return events
 
 
+def dedup_trace(
+    families: Sequence[str],
+    rate: float,
+    duration: float,
+    seed: int = 0,
+    pool_size: int = 4,
+    variants: Optional[Dict[str, List[dict]]] = None,
+) -> List[TraceEvent]:
+    """A Poisson arrival process over a SMALL pool of recurring instances.
+
+    `poisson_trace` seeds every event uniquely (``(seed, i)``), so no two
+    requests ever share a constraint fingerprint and the service's
+    prepared-network LRU never hits. Real traffic is nothing like that —
+    the same problem instance arrives again and again. This trace models it:
+    arrival times and family/variant picks are drawn exactly like
+    `poisson_trace`, but each event's instance seed is drawn from a pool of
+    ``pool_size`` seeds per (family, variant), so repeated events rebuild
+    byte-identical CSPs and the cache's ``hits`` counter actually moves
+    (`bench_service.py` records the resulting hit-rate)."""
+    if pool_size < 1:
+        raise ValueError("dedup_trace needs pool_size >= 1")
+    base = poisson_trace(families, rate, duration, seed=seed, variants=variants)
+    rng = np.random.default_rng((seed, pool_size))
+    # seeds must stay int tuples (they feed numpy.random.default_rng), so the
+    # per-(family, variant) pool is keyed by a variant ordinal, not by name
+    ordinals: Dict[tuple, int] = {}
+    out = []
+    for ev in base:
+        key = (ev.family, tuple(sorted(ev.knobs.items())))
+        v = ordinals.setdefault(key, len(ordinals))
+        out.append(
+            dataclasses.replace(ev, seed=(seed, v, int(rng.integers(pool_size))))
+        )
+    return out
+
+
 class FastForwardClock:
     """Monotonic clock that advances at wall speed but can jump forward over
     idle gaps — trace replays complete as fast as the compute allows while
