@@ -23,22 +23,29 @@ import time
 from pathlib import Path
 
 from repro.core import mac_solve, solve_many
+from repro.core.search import check_solution
 from repro.problems import generate_batch
 from . import tracker
 from .tracker import OUT_PATH
 
-#: (family, knobs, count, engine). The pallas_packed workload is small (the
-#: stacked kernel runs interpret-mode on CPU); it gates that the packed
-#: enforce_many path keeps working at speed, not an absolute throughput.
+#: (family, knobs, count, engine, speculation). The pallas_packed workload is
+#: small (the stacked kernel runs interpret-mode on CPU); it gates that the
+#: packed enforce_many path keeps working at speed, not an absolute
+#: throughput. The speculative model_rb leg re-runs the hardness-1.0
+#: straggler workload with tree splitting + portfolio racing on (DESIGN.md
+#: §9) — n_solved must match the sequential oracle and the row records
+#: whether duplication actually buys straggler wall-clock.
 WORKLOADS = [
-    ("model_rb", {"n": 12, "hardness": 1.0}, 32, "einsum"),
-    ("coloring_random", {"n": 16, "edge_prob": 0.25, "k": 3}, 32, "einsum"),
-    ("model_rb", {"n": 10, "hardness": 1.0}, 6, "pallas_packed"),
+    ("model_rb", {"n": 12, "hardness": 1.0}, 32, "einsum", None),
+    ("coloring_random", {"n": 16, "edge_prob": 0.25, "k": 3}, 32, "einsum", None),
+    ("model_rb", {"n": 10, "hardness": 1.0}, 6, "pallas_packed", None),
+    ("model_rb", {"n": 12, "hardness": 1.0}, 32, "einsum",
+     {"split_budget": 2, "portfolio": 2}),
 ]
 
 
 def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
-                   seed: int = 0) -> tuple:
+                   seed: int = 0, speculation: dict | None = None) -> tuple:
     csps = generate_batch(family, count, seed=seed, **knobs)
 
     t0 = time.perf_counter()
@@ -47,14 +54,26 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
 
     telemetry: dict = {}
     t0 = time.perf_counter()
-    sols, _ = solve_many(csps, engine=engine, telemetry=telemetry)
+    sols, _ = solve_many(csps, engine=engine, telemetry=telemetry,
+                         **(speculation or {}))
     many_s = time.perf_counter() - t0
 
-    if sols != seq:  # throughput numbers are meaningless if results diverge
+    if speculation:
+        # speculative members race with different heuristics, so the WITNESS
+        # may legitimately differ — the verdict may not, and any witness must
+        # actually satisfy its instance
+        for i, (s, q) in enumerate(zip(sols, seq)):
+            if (s is None) != (q is None):
+                raise AssertionError(
+                    f"{family}+spec[{i}]: verdict diverged from sequential"
+                )
+            if s is not None and not check_solution(csps[i], s):
+                raise AssertionError(f"{family}+spec[{i}]: invalid witness")
+    elif sols != seq:  # throughput numbers are meaningless if results diverge
         raise AssertionError(f"{family}: solve_many diverged from sequential mac_solve")
 
     many_row = {
-        "family": family,
+        "family": family + "+spec" if speculation else family,
         "knobs": knobs,
         "count": count,
         "engine": engine,
@@ -75,11 +94,18 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
         ),
         "fused_fixpoint": bool(telemetry.get("fused_fixpoint", False)),
     }
+    if speculation:
+        many_row["speculation"] = dict(speculation)
+    if "rounds_per_instance" in telemetry:
+        # per-instance rounds-to-solution spread: the straggler story in one
+        # line (p90/max vs p50) plus the log2 histogram
+        many_row["rounds_per_instance"] = telemetry["rounds_per_instance"]
+        many_row["rounds_hist"] = telemetry["rounds_hist"]
     frontier_row = None
     if telemetry.get("device_frontier"):
         frontier_row = {
             "engine": engine,
-            "family": family,
+            "family": family + "+spec" if speculation else family,
             "rounds": telemetry["rounds"],
             "rows_dispatched": telemetry["rows_dispatched"],
             "rows_per_round": round(
@@ -107,8 +133,10 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
 
 def main(out_path: Path = OUT_PATH) -> list:
     rows, frontier = [], []
-    for f, knobs, count, engine in WORKLOADS:
-        many_row, frontier_row = bench_workload(f, knobs, count, engine=engine)
+    for f, knobs, count, engine, speculation in WORKLOADS:
+        many_row, frontier_row = bench_workload(
+            f, knobs, count, engine=engine, speculation=speculation
+        )
         rows.append(many_row)
         if frontier_row is not None:
             frontier.append(frontier_row)

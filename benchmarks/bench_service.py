@@ -38,20 +38,27 @@ from .tracker import OUT_PATH
 #: so the prepared-network LRU serves real hits.
 TRACES = [
     ("einsum", "poisson_mixed_r12_d4", "poisson",
-     ["model_rb", "coloring_random"], 12.0, 4.0),
+     ["model_rb", "coloring_random"], 12.0, 4.0, None),
     ("einsum", "dedup_mixed_r12_d4", "dedup",
-     ["model_rb", "coloring_random"], 12.0, 4.0),
-    ("pallas_packed", "poisson_packed_r6_d2", "poisson", ["model_rb"], 6.0, 2.0),
+     ["model_rb", "coloring_random"], 12.0, 4.0, None),
+    ("pallas_packed", "poisson_packed_r6_d2", "poisson", ["model_rb"], 6.0, 2.0,
+     None),
+    # same mixed trace with speculation on: admission sizes duplication
+    # against queue depth, so under this load rows_per_request stays modest —
+    # the gated quantities are tail latency and the cancel rate
+    ("einsum", "poisson_mixed_r12_d4_spec", "poisson",
+     ["model_rb", "coloring_random"], 12.0, 4.0,
+     {"split_budget": 2, "portfolio": 2}),
 ]
 FULL_TRACES = TRACES + [
     ("einsum", "poisson_mixed_r8_d20", "poisson",
-     ["model_rb", "coloring_random"], 8.0, 20.0),
+     ["model_rb", "coloring_random"], 8.0, 20.0, None),
 ]
 
 
 def bench_trace(label: str, families, rate: float, duration: float,
                 engine: str = "einsum", seed: int = 0,
-                kind: str = "poisson") -> dict:
+                kind: str = "poisson", speculation: dict | None = None) -> dict:
     if kind == "dedup":
         events = dedup_trace(
             families, rate=rate, duration=duration, seed=seed, pool_size=3
@@ -59,7 +66,7 @@ def bench_trace(label: str, families, rate: float, duration: float,
     else:
         events = poisson_trace(families, rate=rate, duration=duration, seed=seed)
     clock = FastForwardClock()
-    svc = SolverService(engine=engine, clock=clock)
+    svc = SolverService(engine=engine, clock=clock, **(speculation or {}))
     t0 = time.perf_counter()
     requests = replay(svc, events, clock)
     wall_s = time.perf_counter() - t0
@@ -87,13 +94,19 @@ def bench_trace(label: str, families, rate: float, duration: float,
         "mean_launches_per_round": snap["mean_launches_per_round"],
         "cache": cache,
         "cache_hit_rate": round(cache.get("hits", 0) / lookups, 4) if lookups else 0.0,
+        "speculation": dict(speculation) if speculation else None,
+        "median_rows_per_request": snap["median_rows_per_request"],
+        "speculative_members": snap["speculative_members"],
+        "speculative_cancel_rate": snap["speculative_cancel_rate"],
     }
 
 
 def main(quick: bool = True, out_path: Path = OUT_PATH) -> list:
     rows = [
-        bench_trace(label, fams, rate, dur, engine=engine, kind=kind)
-        for engine, label, kind, fams, rate, dur in (TRACES if quick else FULL_TRACES)
+        bench_trace(label, fams, rate, dur, engine=engine, kind=kind,
+                    speculation=spec)
+        for engine, label, kind, fams, rate, dur, spec
+        in (TRACES if quick else FULL_TRACES)
     ]
     for r in rows:
         print(

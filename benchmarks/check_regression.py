@@ -17,10 +17,12 @@ section must not look like zero regressions.
 
 The "many" section (solve_many workload throughput) is gated on
 ``many_instances_per_s``: a ``> tolerance``× throughput drop fails, matched by
-(engine, family). The "service" section (bench_service trace replays) is
-gated the same way: p95 latency may not regress ``> tolerance``× and
-sustained throughput may not drop ``> tolerance``×, matched by
-(engine, trace). The "frontier" section (device-resident lockstep rounds,
+(engine, family). ``n_solved`` is additionally a hard FLOOR — fewer instances
+solved than the baseline is a completeness bug (a speculative search dropping
+a verdict), never runner noise, so no tolerance applies. The "service"
+section (bench_service trace replays) is gated the same way: p95 AND p99 tail
+latency may not regress ``> tolerance``× and sustained throughput may not
+drop ``> tolerance``×, matched by (engine, trace). The "frontier" section (device-resident lockstep rounds,
 DESIGN.md §8) gates ``host_bytes_per_round`` AND ``metadata_fraction``: a
 ``> tolerance``× growth in per-round host↔device traffic — absolute bytes, or
 the fraction of the counterfactual full-domain protocol — e.g. a domain
@@ -105,15 +107,24 @@ def compare_many(baseline: dict, fresh: dict, tolerance: float) -> list:
         b = base_rows[key]["many_instances_per_s"]
         f = fresh_rows[key]["many_instances_per_s"]
         ratio = (b + eps) / (f + eps)  # throughput DROP factor
-        status = "FAIL" if ratio > tolerance else "ok"
+        b_solved = base_rows[key].get("n_solved")
+        f_solved = fresh_rows[key].get("n_solved", 0)
+        solved_ok = b_solved is None or f_solved >= b_solved
+        status = "FAIL" if ratio > tolerance or not solved_ok else "ok"
         print(
             f"{status:4s} many:{engine:10s} {family:34s} "
-            f"{b:8.3f} -> {f:8.3f} inst/s ({1 / max(ratio, eps):.2f}x)"
+            f"{b:8.3f} -> {f:8.3f} inst/s ({1 / max(ratio, eps):.2f}x), "
+            f"solved {b_solved} -> {f_solved}"
         )
         if ratio > tolerance:
             failures.append(
                 f"many {engine} {family}: many_instances_per_s {b} -> {f} "
                 f"({ratio:.2f}x drop > {tolerance}x)"
+            )
+        if not solved_ok:
+            failures.append(
+                f"many {engine} {family}: n_solved {b_solved} -> {f_solved} "
+                "(below baseline floor — verdicts went missing)"
             )
     for key in sorted(set(fresh_rows) - set(base_rows)):
         print(f"new  many:{key[0]:10s} {key[1]:34s} (no baseline — passes)")
@@ -178,8 +189,11 @@ def index_service(report: dict) -> dict:
 
 
 def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
-    """Gate the service section: p95 latency up or throughput down by more
-    than ``tolerance``× fails. Same missing/new-cell policy as engine cells."""
+    """Gate the service section: p95 or p99 tail latency up, or throughput
+    down, by more than ``tolerance``× fails. The p99 gate exists specifically
+    for speculation: duplication that helps the median but starves the queue
+    shows up in the extreme tail first. Same missing/new-cell policy as
+    engine cells."""
     failures = []
     base_rows, fresh_rows = index_service(baseline), index_service(fresh)
     eps = 1e-3  # one rounding quantum floor, as for the latency cells
@@ -190,12 +204,19 @@ def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
             continue
         b, f = base_rows[key], fresh_rows[key]
         lat_ratio = (f["p95_ms"] + eps) / (b["p95_ms"] + eps)
+        # pre-gate baselines may lack p99 in old files; treat missing as pass
+        p99_ratio = (
+            (f["p99_ms"] + eps) / (b["p99_ms"] + eps)
+            if b.get("p99_ms") is not None and f.get("p99_ms") is not None
+            else 1.0
+        )
         tput_ratio = (b["throughput_rps"] + eps) / (f["throughput_rps"] + eps)
-        worst = max(lat_ratio, tput_ratio)
+        worst = max(lat_ratio, p99_ratio, tput_ratio)
         status = "FAIL" if worst > tolerance else "ok"
         print(
             f"{status:4s} service:{engine:7s} {trace:34s} "
             f"p95 {b['p95_ms']:8.1f} -> {f['p95_ms']:8.1f} ms ({lat_ratio:.2f}x), "
+            f"p99 ({p99_ratio:.2f}x), "
             f"tput {b['throughput_rps']:.2f} -> {f['throughput_rps']:.2f} rps "
             f"({1 / max(tput_ratio, eps):.2f}x)"
         )
@@ -203,6 +224,11 @@ def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
             failures.append(
                 f"service {engine} {trace}: p95_ms {b['p95_ms']} -> {f['p95_ms']} "
                 f"({lat_ratio:.2f}x > {tolerance}x)"
+            )
+        if p99_ratio > tolerance:
+            failures.append(
+                f"service {engine} {trace}: p99_ms {b['p99_ms']} -> {f['p99_ms']} "
+                f"({p99_ratio:.2f}x > {tolerance}x)"
             )
         if tput_ratio > tolerance:
             failures.append(

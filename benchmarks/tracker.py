@@ -77,6 +77,9 @@ def _summarize(key: str, value) -> Optional[dict]:
                 f"{r['engine']}/{r['trace']}": {
                     "p95_ms": r["p95_ms"],
                     "throughput_rps": r["throughput_rps"],
+                    # speculation occupancy trend: rows one request consumes
+                    # over its lifetime (1/round when speculation is off)
+                    "median_rows_per_request": r.get("median_rows_per_request", 0.0),
                 }
                 for r in value
             }

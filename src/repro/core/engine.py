@@ -442,18 +442,29 @@ class RoundMeta(NamedTuple):
     #: kernel launches this round's enforcement cost: 1 on a fused in-kernel
     #: fixpoint, the round's max recurrence depth on the stepped while_loop
     launches: int = 1
+    #: anti-MRV decision (portfolio heuristic diversity, DESIGN.md §9): the
+    #: argmax counterpart of ``branch_var``/``value_row``. ``None`` unless the
+    #: store was asked for it (`FrontierTable.enable_alt`) — the extra O(R·d)
+    #: metadata only ships when some admitted member actually branches anti.
+    alt_var: Optional[np.ndarray] = None  # (R,) int32
+    alt_row: Optional[np.ndarray] = None  # (R, d) bool
 
 
 _INT32_MAX = np.iinfo(np.int32).max
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1), static_argnames=("fix",))
-def _frontier_step(buf, abuf, networks, parent, var, val, dest, net_idx, *, fix):
+@functools.partial(
+    jax.jit, donate_argnums=(0, 1), static_argnames=("fix", "want_alt")
+)
+def _frontier_step(buf, abuf, networks, parent, var, val, dest, net_idx, *, fix,
+                   want_alt=False):
     """ONE fused round: gather parent closures AND assignment masks from the
     resident frontier planes, assign + enforce (the engine's fused ``fix``),
     scatter the children back, and reduce the per-row metadata — neither
     domains nor assignment masks ever leave the device. ``buf``/``abuf`` are
-    donated: XLA updates the tables in place."""
+    donated: XLA updates the tables in place. ``want_alt`` additionally
+    reduces the anti-MRV decision (portfolio heuristic diversity) — a second
+    O(R·d) metadata pair, compiled in only when some search branches anti."""
     doms = buf[parent]  # (R, n, d)
     res = fix(networks, doms, var, val, net_idx)
     buf = buf.at[dest].set(res.dom)
@@ -470,7 +481,16 @@ def _frontier_step(buf, abuf, networks, parent, var, val, dest, net_idx, *, fix)
     sizes = jnp.sum(res.dom, axis=-1).astype(jnp.int32)  # (R, n)
     bvar = jnp.argmin(jnp.where(assigned, _INT32_MAX, sizes), axis=-1).astype(jnp.int32)
     vrow = jnp.take_along_axis(res.dom, bvar[:, None, None], axis=1)[:, 0, :]  # (R, d)
-    return buf, abuf, res.consistent, res.n_recurrences, bvar, vrow
+    out = (buf, abuf, res.consistent, res.n_recurrences, bvar, vrow)
+    if want_alt:
+        # anti-MRV: first argmax over unassigned domain sizes — identical
+        # ints + ties to search._select_var_anti (assigned → -1 sentinel)
+        avar = jnp.argmax(
+            jnp.where(assigned, jnp.int32(-1), sizes), axis=-1
+        ).astype(jnp.int32)
+        arow = jnp.take_along_axis(res.dom, avar[:, None, None], axis=1)[:, 0, :]
+        out = out + (avar, arow)
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -507,8 +527,8 @@ class _PendingFrontierRound:
         self._r = r
 
     def resolve(self) -> RoundMeta:
-        cons, k, bvar, vrow = jax.device_get(self._meta)
-        self._table._count_d2h(cons, k, bvar, vrow)
+        cons, k, bvar, vrow, *alt = jax.device_get(self._meta)
+        self._table._count_d2h(cons, k, bvar, vrow, *alt)
         r = self._r
         handles: List[Optional[int]] = []
         for i, (key, row) in enumerate(zip(self._keys, self._dest)):
@@ -522,7 +542,10 @@ class _PendingFrontierRound:
         # iteration of the deepest row (XLA while_loop runs to the max k)
         launches = 1 if self._table.fused_fixpoint else max(1, int(k[:r].max()))
         self._table.launches += launches
-        return RoundMeta(handles, cons[:r], k[:r], bvar[:r], vrow[:r], launches)
+        avar, arow = (alt[0][:r], alt[1][:r]) if alt else (None, None)
+        return RoundMeta(
+            handles, cons[:r], k[:r], bvar[:r], vrow[:r], launches, avar, arow
+        )
 
 
 class FrontierTable:
@@ -598,6 +621,16 @@ class FrontierTable:
         self.d2h_bytes = 0
         self.root_bytes = 0
         self.extract_bytes = 0
+        #: ship the anti-MRV metadata pair with every round (DESIGN.md §9) —
+        #: off by default so the O(R·d) budget is unchanged unless some
+        #: admitted portfolio member actually branches anti-MRV
+        self._want_alt = False
+
+    def enable_alt(self) -> None:
+        """Opt this table into anti-MRV metadata for all subsequent rounds
+        (a static jit arg — flipping it compiles fresh round programs, so the
+        driver sets it once at group admission, not per round)."""
+        self._want_alt = True
 
     @property
     def capacity(self) -> int:
@@ -606,6 +639,12 @@ class FrontierTable:
     @property
     def rows_live(self) -> int:
         return self.capacity - len(self._free_rows)
+
+    def spare_rows(self) -> int:
+        """Rows currently unoccupied — what speculative admission sizes its
+        duplication budget against (capacity can still grow by doubling, but
+        speculation should fill slack, not force reallocations)."""
+        return len(self._free_rows)
 
     @property
     def host_bytes_per_round(self) -> float:
@@ -639,15 +678,22 @@ class FrontierTable:
 
     # --- search lifecycle ---------------------------------------------------
 
+    def register(self, key, net: int) -> None:
+        """Register a search key with its network routing but NO root upload —
+        how a split sibling joins the table: its first frontier row is a
+        child-create against the parent's still-resident row, so the sibling
+        never moves a domain across the host boundary at all."""
+        if key in self._rows_of:
+            raise ValueError(f"search key {key!r} already registered")
+        self._rows_of[key] = set()
+        self._net_of[key] = int(net)
+
     def begin(self, key, net: int, root_dom: np.ndarray, assigned=None) -> int:
         """Register a search and upload its root domain + initial assignment
         mask into a fresh row — the ONE domain-sized host→device transfer of
         the search's lifetime (``assigned`` marks bucket-padding variables as
         born assigned; the mask lives on device from here on)."""
-        if key in self._rows_of:
-            raise ValueError(f"search key {key!r} already registered")
-        self._rows_of[key] = set()
-        self._net_of[key] = int(net)
+        self.register(key, net)
         row = self._alloc(key)
         dom = jax.device_put(np.asarray(root_dom, dtype=bool))
         if assigned is None:
@@ -729,7 +775,8 @@ class FrontierTable:
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
             self._buf, self._abuf, *meta = _frontier_step(
-                self._buf, self._abuf, self._networks(), *args, fix=self._fix
+                self._buf, self._abuf, self._networks(), *args, fix=self._fix,
+                want_alt=self._want_alt,
             )
         return _PendingFrontierRound(self, tuple(meta), dest, [s.key for s in specs], r)
 
@@ -798,6 +845,12 @@ class Engine(abc.ABC):
     #: Pallas backends' ``fixpoint=`` knob) shadow this with an instance
     #: attribute; the frontier's launch accounting reads it either way.
     fused_fixpoint: ClassVar[bool] = False
+    #: ceiling on how many frontier rows ONE request may speculatively occupy
+    #: on this backend (tree-split siblings + portfolio members, DESIGN.md §9).
+    #: An occupancy hint, not a semantic knob: wide stacked backends amortize
+    #: extra rows almost for free, host loops pay per row. The service clamps
+    #: its duplication budget by it at admission.
+    speculative_rows_hint: ClassVar[int] = 32
 
     def network_nbytes(self, n_vars: int, dom_size: int) -> int:
         """Resident device bytes of ONE prepared network of caller shape

@@ -99,6 +99,21 @@ class SearchStats:
     #: (None, stats) result with ``exhausted=True`` is *inconclusive*, NOT a
     #: proof of unsatisfiability.
     exhausted: bool = False
+    #: lockstep rounds this search's rows rode (1 dispatch each in
+    #: ``mac_solve``; shared dispatches under `LockstepDriver`) — the
+    #: per-instance rounds-to-solution the `solve_many` telemetry histograms.
+    rounds: int = 0
+    #: frontier rows dispatched on this search's behalf (== requests enforced
+    #: solo; the group total under speculation — the service's
+    #: ``rows_per_request`` metric).
+    rows: int = 0
+    #: speculative members this request occupied (owner + split siblings +
+    #: portfolio racers, DESIGN.md §9). 1 = no speculation; the stats object
+    #: is SHARED across a group, so every counter above is the group total.
+    members: int = 1
+    #: members cancelled when the group resolved (first SAT wins / UNSAT
+    #: needs the whole cover) — speculative work thrown away.
+    cancelled_members: int = 0
 
     @property
     def mean_recurrences(self) -> float:
@@ -124,6 +139,64 @@ def _select_var(dom_np: np.ndarray, assigned: np.ndarray) -> int:
     sizes = dom_np.sum(axis=1).astype(np.int64)
     sizes[assigned] = np.iinfo(np.int64).max
     return int(np.argmin(sizes))
+
+
+def _select_var_anti(dom_np: np.ndarray, assigned: np.ndarray) -> int:
+    """Anti-MRV (largest remaining domain first) — a deliberately contrarian
+    portfolio heuristic (DESIGN.md §9). The device frontier's ``want_alt``
+    metadata computes exactly this (first argmax, assigned → -1 sentinel)."""
+    sizes = dom_np.sum(axis=1).astype(np.int64)
+    sizes[assigned] = -1
+    return int(np.argmax(sizes))
+
+
+class PortfolioSpec(NamedTuple):
+    """One portfolio racer's decision policy: the branching-variable heuristic
+    (``"mrv"`` | ``"anti"``) and the value ordering (``"lex"`` — the oracle's
+    native order, ``"flip"`` — reversed, ``"shuffle"`` — seeded random)."""
+
+    heuristic: str = "mrv"
+    value_order: str = "lex"
+    seed: int = 0
+
+
+#: the diversity cycle `default_portfolio` deals racers from — maximally
+#: different from the owner's (mrv, lex) policy first
+_PORTFOLIO_CYCLE = (
+    PortfolioSpec("mrv", "flip"),
+    PortfolioSpec("anti", "lex"),
+    PortfolioSpec("anti", "flip"),
+    PortfolioSpec("mrv", "shuffle"),
+    PortfolioSpec("anti", "shuffle"),
+)
+
+
+def default_portfolio(k: int, seed: int = 0) -> List[PortfolioSpec]:
+    """``k`` racer policies, cycling the diversity deck with distinct seeds."""
+    return [
+        _PORTFOLIO_CYCLE[i % len(_PORTFOLIO_CYCLE)]._replace(seed=seed + i)
+        for i in range(max(0, k))
+    ]
+
+
+def _value_order_fn(order: str, seed: int = 0):
+    """The values-tuple transform of a `PortfolioSpec` (None = native order).
+    The shuffle RNG is seeded once per member — deterministic for a given
+    (spec, search path), which is all verdict parity needs."""
+    if order == "lex":
+        return None
+    if order == "flip":
+        return lambda values: tuple(reversed(values))
+    if order == "shuffle":
+        rng = np.random.default_rng(seed)
+
+        def shuffle(values):
+            vs = list(values)
+            rng.shuffle(vs)
+            return tuple(vs)
+
+        return shuffle
+    raise ValueError(f"unknown value_order {order!r}")
 
 
 def resolve_engine(engine: Union[Engine, str], support_fn=None) -> Engine:
@@ -167,12 +240,17 @@ class _Reply(NamedTuple):
     """Per-child decision metadata — everything dfs needs at the next level.
     ``handles[i]`` is None where the child wiped out (its row was freed);
     ``branch_var``/``values`` are the MRV decision computed ON the closure
-    (ignored for inconsistent or fully-assigned children)."""
+    (ignored for inconsistent or fully-assigned children). ``alt_var``/
+    ``alt_values`` are the anti-MRV decision — present only when the store
+    ships it (`enable_alt`), consumed only by anti-heuristic portfolio
+    members."""
 
     handles: List[Optional[int]]
     consistent: np.ndarray  # (b,) bool
     branch_var: np.ndarray  # (b,) int
     values: List[Optional[Tuple[int, ...]]]
+    alt_var: Optional[np.ndarray] = None  # (b,) int
+    alt_values: Optional[List[Optional[Tuple[int, ...]]]] = None
 
 
 _MacGen = Generator[_Request, _Reply, Optional[List[int]]]
@@ -187,6 +265,12 @@ def _mac_coroutine(
     max_assignments: Optional[int],
     stats: SearchStats,
     n_active: Optional[int] = None,
+    *,
+    heuristic: str = "mrv",
+    value_order=None,
+    root_spec: Optional[Tuple[int, int, Tuple[int, ...]]] = None,
+    assigned0: Optional[np.ndarray] = None,
+    split_fn=None,
 ) -> _MacGen:
     """Alg. 2 as a coroutine: yields `_Request`s, receives `_Reply`s, returns
     the solution (or None). The coroutine owns every search decision and the
@@ -203,18 +287,49 @@ def _mac_coroutine(
     variables beyond it (bucket padding under the §2 contract — unconstrained,
     singleton domain) start out assigned, are never branched on, and are
     excluded from the returned solution, so a padded search takes bit-identical
-    decisions to the unpadded one."""
+    decisions to the unpadded one.
+
+    Speculation hooks (DESIGN.md §9; all default off — the oracle path above
+    is byte-for-byte the classical search):
+
+    - ``heuristic``: ``"mrv"`` (the oracle) or ``"anti"`` — branch on the
+      reply's anti-MRV decision instead (requires the store's alt metadata).
+    - ``value_order``: optional tuple transform applied to each node's value
+      list (portfolio value diversity).
+    - ``root_spec=(parent, var, values)``: start as a *split sibling* — the
+      first request is a child-create against the (foreign, still-resident)
+      ``parent`` row instead of a root propagation; ``assigned0`` is the
+      assignment mask at the split node. The sibling touches the foreign row
+      exactly once, at its first yield, which the driver dispatches while the
+      owner still holds the row — after that every row it reads is its own.
+    - ``split_fn(handle, var, values, assigned)``: called at every node with
+      >1 values; returns the values THIS coroutine keeps and queues sibling
+      spawns for the rest (the driver's group budget decides how many).
+    """
     dom0 = np.asarray(csp.dom)
     n, _ = dom0.shape
     n_real = n if n_active is None else n_active
 
-    assigned = np.zeros((n,), dtype=bool)
-    assigned[n_real:] = True
+    if assigned0 is not None:
+        assigned = np.array(assigned0, dtype=bool)
+    else:
+        assigned = np.zeros((n,), dtype=bool)
+        assigned[n_real:] = True
 
-    # Root propagation (Alg. 2 line 3).
-    reply = yield _Request(None, -1, (), assigned.copy())
-    if not bool(reply.consistent[0]):
-        return None
+    anti = heuristic == "anti"
+    if heuristic not in ("mrv", "anti"):
+        raise ValueError(f"unknown heuristic {heuristic!r}")
+
+    def decide(reply: _Reply, i: int) -> Tuple[int, Optional[Tuple[int, ...]]]:
+        if anti:
+            if reply.alt_var is None:
+                raise RuntimeError(
+                    "anti-MRV member needs a store with alt metadata "
+                    "(FrontierStore.enable_alt) — the driver enables it at "
+                    "group admission"
+                )
+            return int(reply.alt_var[i]), reply.alt_values[i]
+        return int(reply.branch_var[i]), reply.values[i]
 
     def solution_of(handle: int) -> List[int]:
         dom_np = extract_fn(handle)
@@ -223,6 +338,11 @@ def _mac_coroutine(
     def dfs(handle: int, var: int, values: Tuple[int, ...]) -> _MacGen:
         if assigned.all():
             return solution_of(handle)
+
+        if value_order is not None and len(values) > 1:
+            values = tuple(value_order(values))
+        if split_fn is not None and len(values) > 1:
+            values = split_fn(handle, var, values, assigned)
 
         child_reply: Optional[_Reply] = None
         child_mask = assigned.copy()
@@ -238,11 +358,11 @@ def _mac_coroutine(
                     raise BudgetExceeded
                 if child_reply is not None:
                     child, ok = child_reply.handles[i], bool(child_reply.consistent[i])
-                    cvar, cvals = int(child_reply.branch_var[i]), child_reply.values[i]
+                    cvar, cvals = decide(child_reply, i)
                 else:
                     r = yield _Request(handle, var, (val,), child_mask)
                     child, ok = r.handles[0], bool(r.consistent[0])
-                    cvar, cvals = int(r.branch_var[0]), r.values[0]
+                    cvar, cvals = decide(r, 0)
                 if ok:
                     sol = yield from dfs(child, cvar, cvals)
                     if sol is not None:
@@ -253,7 +373,16 @@ def _mac_coroutine(
         finally:
             assigned[var] = False
 
-    return (yield from dfs(reply.handles[0], int(reply.branch_var[0]), reply.values[0]))
+    if root_spec is not None:
+        parent_h, var0, values0 = root_spec
+        return (yield from dfs(parent_h, var0, tuple(values0)))
+
+    # Root propagation (Alg. 2 line 3).
+    reply = yield _Request(None, -1, (), assigned.copy())
+    if not bool(reply.consistent[0]):
+        return None
+    var0, values0 = decide(reply, 0)
+    return (yield from dfs(reply.handles[0], var0, values0))
 
 
 
@@ -291,20 +420,37 @@ class HostFrontierStore:
         self._of_key: Dict[Any, set] = {}
         self._net_of: Dict[Any, int] = {}
         self._handles = itertools.count()
+        self._want_alt = False
+
+    def enable_alt(self) -> None:
+        """Ship the anti-MRV decision with every subsequent round (portfolio
+        heuristic diversity — mirrors `FrontierTable.enable_alt`)."""
+        self._want_alt = True
+
+    def spare_rows(self) -> int:
+        """Host closures are heap-allocated — occupancy never limits
+        speculation here (admission clamps by the engine hint instead)."""
+        return 1 << 20
 
     def _new_handle(self, key) -> int:
         h = next(self._handles)
         self._of_key[key].add(h)
         return h
 
-    def begin(self, key, net: int, root_dom: np.ndarray, assigned=None) -> int:
-        # ``assigned`` is part of the store protocol (the device table keeps
-        # the mask resident); the host store reads it off each request instead
-        del assigned
+    def register(self, key, net: int) -> None:
+        """Register a search key with its network routing but no root closure
+        — how a split sibling joins: its first request is a child-create
+        against the owner's still-resident node."""
         if key in self._of_key:
             raise ValueError(f"search key {key!r} already registered")
         self._of_key[key] = set()
         self._net_of[key] = int(net)
+
+    def begin(self, key, net: int, root_dom: np.ndarray, assigned=None) -> int:
+        # ``assigned`` is part of the store protocol (the device table keeps
+        # the mask resident); the host store reads it off each request instead
+        del assigned
+        self.register(key, net)
         h = self._new_handle(key)
         self._doms[h] = np.asarray(root_dom, dtype=bool)
         return h
@@ -353,6 +499,8 @@ class HostFrontierStore:
         handles: List[Optional[int]] = []
         bvar = np.zeros((r,), np.int32)
         vrow = np.zeros((r, d), dtype=bool)
+        avar = np.zeros((r,), np.int32) if self._want_alt else None
+        arow = np.zeros((r, d), dtype=bool) if self._want_alt else None
         for i, s in enumerate(specs):
             if not bool(cons[i]):
                 handles.append(None)
@@ -362,11 +510,15 @@ class HostFrontierStore:
             handles.append(h)
             bvar[i] = _select_var(dom_out[i], s.assigned)
             vrow[i] = dom_out[i][bvar[i]]
+            if avar is not None:
+                avar[i] = _select_var_anti(dom_out[i], s.assigned)
+                arow[i] = dom_out[i][avar[i]]
         # host stores run the stepped recurrence: one enforcement dispatch per
         # iteration of the deepest row (same launch model as the stepped
         # device frontier — `core.engine._PendingFrontierRound.resolve`)
         launches = max(1, int(k.max())) if k.size else 1
-        return _SyncRound(RoundMeta(handles, cons, k, bvar, vrow, launches))
+        return _SyncRound(RoundMeta(handles, cons, k, bvar, vrow, launches,
+                                    avar, arow))
 
 
 class _SingleSearchStore(HostFrontierStore):
@@ -415,24 +567,27 @@ def _drive_single(store: HostFrontierStore, root: int, gen: _MacGen,
                 ]
             t0 = time.perf_counter()
             res = store.dispatch(specs).resolve()
+            stats.rounds += 1
+            stats.rows += len(specs)
             if collect_stats:
                 stats.enforce_seconds.append(time.perf_counter() - t0)
                 counts.extend(int(v) for v in res.k)
                 stats.launches += res.launches
             req = gen.send(_Reply(res.handles, res.consistent, res.branch_var,
-                                  _value_lists(res)))
+                                  _value_lists(res.handles, res.value_row)))
     except StopIteration as stop:
         return stop.value
 
 
-def _value_lists(res: RoundMeta) -> List[Optional[Tuple[int, ...]]]:
-    """Per-row live values of the branching variable (None where the row wiped
-    out) — the host side of the d-bit value row the round shipped back."""
+def _value_lists(handles: Sequence[Optional[int]],
+                 rows: np.ndarray) -> List[Optional[Tuple[int, ...]]]:
+    """Per-row live values of a selected variable (None where the row wiped
+    out) — the host side of the d-bit value rows the round shipped back."""
     return [
-        tuple(int(v) for v in np.nonzero(res.value_row[i])[0])
-        if res.handles[i] is not None
+        tuple(int(v) for v in np.nonzero(rows[i])[0])
+        if handles[i] is not None
         else None
-        for i in range(len(res.handles))
+        for i in range(len(handles))
     ]
 
 
@@ -443,11 +598,41 @@ def mac_solve(
     max_assignments: Optional[int] = None,
     batched_children: bool = True,
     collect_stats: bool = True,
+    split_budget: int = 0,
+    portfolio: int = 0,
+    portfolio_seed: int = 0,
 ) -> Tuple[Optional[List[int]], SearchStats]:
     """Returns (solution | None, stats). Raises nothing on budget exhaustion —
-    stops and returns (None, stats) with ``stats.n_assignments`` at the cap."""
+    stops and returns (None, stats) with ``stats.n_assignments`` at the cap.
+
+    With ``split_budget > 0`` or ``portfolio > 0`` the single solve becomes a
+    speculative *group* (DESIGN.md §9): up to ``split_budget`` tree-split
+    siblings plus ``portfolio`` heuristic-diverse racers explore concurrently
+    under a shared assignment budget; the first SAT wins, UNSAT needs the
+    whole cover. Both default 0 so plain ``mac_solve`` stays the bit-identical
+    sequential oracle the parity suite compares everything against. Verdicts
+    (SAT/UNSAT) are identical to the oracle's; a budget stop remains
+    inconclusive either way."""
     eng = resolve_engine(engine, support_fn)
     prepared = eng.prepare(csp)  # the ONLY preparation in the whole run
+    if split_budget or portfolio:
+        store = _SingleSearchStore(prepared)
+        driver = LockstepDriver(store, prepared.n_vars, count_unit=eng.count_unit)
+        stats = driver.admit_group(
+            0, csp,
+            split_budget=split_budget,
+            portfolio=portfolio,
+            portfolio_seed=portfolio_seed,
+            supports_batch=eng.supports_batch,
+            batched_children=batched_children,
+            max_assignments=max_assignments,
+            collect_stats=collect_stats,
+        )
+        sol = None
+        while driver.has_work:
+            for _k, (s, _st) in driver.round().items():
+                sol = s
+        return sol, stats
     stats = SearchStats()
     counts = stats.recurrences if eng.count_unit == "recurrences" else stats.revisions
     store = _SingleSearchStore(prepared)
@@ -487,6 +672,58 @@ class RoundInfo(NamedTuple):
     searches: int
     seconds: float
     launches: int = 1
+
+
+class _MemberKey(NamedTuple):
+    """Store/driver key of one speculative group member: ``(group key, member
+    ordinal)``. Member 0 is the owner (the cover's first tile); higher
+    ordinals are split siblings and portfolio racers in admission order."""
+
+    group: Any
+    m: int
+
+
+def _sort_key(k):
+    """Total order over mixed solo keys and `_MemberKey`s (a solo key sorts
+    as member -1 of itself, so one group's members stay adjacent)."""
+    return (k.group, k.m) if isinstance(k, _MemberKey) else (k, -1)
+
+
+@dataclasses.dataclass
+class _Group:
+    """One speculative request: the members racing on its behalf and the
+    resolution state (DESIGN.md §9). The verdict contract:
+
+    - any member returning a solution resolves the group SAT (losers are
+      cancelled — their rows free immediately);
+    - the ``cover`` set (owner + split siblings, including queued spawns not
+      yet admitted) tiles the search tree exactly once: when every cover
+      member has returned None un-exhausted, the group is proven UNSAT;
+    - a ``complete`` member (portfolio racer — its own full restart of the
+      tree) returning None un-exhausted proves UNSAT by itself;
+    - ``stats`` is ONE object shared by every member, so ``max_assignments``
+      is a group-total budget and the merged counters come for free; any
+      member tripping the budget resolves the whole group exhausted
+      (inconclusive), eagerly."""
+
+    key: Any
+    csp: CSP
+    idx: int
+    stats: SearchStats
+    split_budget: int
+    supports_batch: bool
+    batched_children: bool
+    n_active: Optional[int]
+    max_assignments: Optional[int]
+    collect: bool
+    split_fn: Any = None
+    live: set = dataclasses.field(default_factory=set)
+    cover: set = dataclasses.field(default_factory=set)
+    complete: set = dataclasses.field(default_factory=set)
+    done: bool = False
+    result: Optional[List[int]] = None
+    exhausted: bool = False
+    next_m: int = 0
 
 
 class LockstepDriver:
@@ -537,6 +774,13 @@ class LockstepDriver:
         self._root: Dict[object, int] = {}
         self._stats: Dict[object, SearchStats] = {}
         self._collect: Dict[object, bool] = {}
+        # speculative groups (DESIGN.md §9): group key -> _Group, member key
+        # -> its group, and the sibling spawns queued by split_fn between
+        # rounds (admitted at the top of the next round, while the parent row
+        # they reference is guaranteed still live)
+        self._groups: Dict[object, _Group] = {}
+        self._group_of: Dict[object, _Group] = {}
+        self._spawns: List[Tuple] = []
         self._inflight = None  # (layout, pending round, t0)
         # membership-stable caches: the sorted key order is rebuilt only when
         # membership changes, the np.repeat routing array only when the
@@ -568,7 +812,7 @@ class LockstepDriver:
         """Join a new search; it participates from the next dispatch on.
         ``idx`` routes the search's rows to its constraint network. Returns
         the live `SearchStats` (filled in as rounds run)."""
-        if key in self._gens:
+        if key in self._gens or key in self._groups:
             raise ValueError(f"search key {key!r} already admitted")
         stats = SearchStats()
         gen = _mac_coroutine(
@@ -592,29 +836,247 @@ class LockstepDriver:
         self._order_dirty = True
         return stats
 
-    def cancel(self, key) -> SearchStats:
-        """Evict a live search (e.g. deadline expiry); frees its rows even if
-        they are part of an in-flight round (the round's results for this
-        search are simply dropped at resolution)."""
+    def admit_group(
+        self,
+        key,
+        csp: CSP,
+        idx: int = 0,
+        *,
+        split_budget: int = 0,
+        portfolio: int = 0,
+        portfolio_seed: int = 0,
+        supports_batch: bool = True,
+        batched_children: bool = True,
+        n_active: Optional[int] = None,
+        max_assignments: Optional[int] = None,
+        collect_stats: bool = True,
+    ) -> SearchStats:
+        """Join one request as a speculative GROUP (DESIGN.md §9): an owner
+        search that may scatter up to ``split_budget`` sibling subtrees onto
+        spare rows as it branches, racing ``portfolio`` heuristic-diverse full
+        restarts. ``round()`` reports the group under ``key`` exactly like a
+        solo search — first SAT wins (the rest are cancelled), UNSAT needs
+        the whole cover, ``max_assignments`` is a group-total budget. The
+        returned `SearchStats` is shared by every member, so its counters are
+        the request's totals. With both knobs 0 this IS ``admit``."""
+        if split_budget <= 0 and portfolio <= 0:
+            return self.admit(
+                key, csp, idx,
+                supports_batch=supports_batch,
+                batched_children=batched_children,
+                n_active=n_active,
+                max_assignments=max_assignments,
+                collect_stats=collect_stats,
+            )
+        if key in self._gens or key in self._groups:
+            raise ValueError(f"search key {key!r} already admitted")
+        g = _Group(
+            key=key, csp=csp, idx=int(idx), stats=SearchStats(),
+            split_budget=int(split_budget), supports_batch=supports_batch,
+            batched_children=batched_children, n_active=n_active,
+            max_assignments=max_assignments, collect=collect_stats,
+        )
+        self._groups[key] = g
+
+        def split_fn(handle, var, values, assigned):
+            if g.done or g.split_budget <= 0 or len(values) < 2:
+                return values
+            s = min(g.split_budget, len(values) - 1)
+            g.split_budget -= s
+            keep = values[: len(values) - s]
+            for v in values[len(values) - s:]:
+                mkey = _MemberKey(g.key, g.next_m)
+                g.next_m += 1
+                # in the cover from queue time: the subtree is spoken for even
+                # before its sibling is admitted, so an emptying cover can't
+                # mis-declare UNSAT while spawns are still queued
+                g.cover.add(mkey)
+                g.stats.members += 1
+                self._spawns.append((g, mkey, handle, var, (v,), assigned.copy()))
+            return keep
+
+        if split_budget > 0:
+            g.split_fn = split_fn
+
+        owner = _MemberKey(key, g.next_m)
+        g.next_m += 1
+        g.cover.add(owner)
+        self._admit_member(g, owner, heuristic="mrv", value_order=None,
+                           split_fn=g.split_fn)
+        for spec in default_portfolio(portfolio, portfolio_seed):
+            mkey = _MemberKey(key, g.next_m)
+            g.next_m += 1
+            g.complete.add(mkey)
+            g.stats.members += 1
+            if spec.heuristic == "anti" and hasattr(self._store, "enable_alt"):
+                self._store.enable_alt()
+            self._admit_member(
+                g, mkey, heuristic=spec.heuristic,
+                value_order=_value_order_fn(spec.value_order, spec.seed),
+                split_fn=None,
+            )
+        return g.stats
+
+    def _admit_member(self, g: _Group, mkey, *, heuristic, value_order,
+                      split_fn) -> None:
+        """Admit one full-restart group member (owner or portfolio racer):
+        its own root upload, the group's shared stats and budget."""
+        gen = _mac_coroutine(
+            g.csp,
+            functools.partial(self._store.free, mkey),
+            functools.partial(self._store.extract, mkey),
+            g.supports_batch,
+            g.batched_children,
+            g.max_assignments,
+            g.stats,
+            n_active=g.n_active,
+            heuristic=heuristic,
+            value_order=value_order,
+            split_fn=split_fn,
+        )
+        req0 = gen.send(None)  # root request; always yields ≥ once
+        root = self._store.begin(mkey, g.idx, np.asarray(g.csp.dom), req0.assigned)
+        self._pending[mkey] = req0
+        self._gens[mkey] = gen
+        self._idx[mkey] = g.idx
+        self._root[mkey] = root
+        self._stats[mkey] = g.stats
+        self._collect[mkey] = g.collect
+        self._group_of[mkey] = g
+        g.live.add(mkey)
+        self._order_dirty = True
+
+    def _admit_spawns(self, finished: Dict) -> None:
+        """Materialize the sibling spawns split_fn queued during the last
+        ``_advance``: each joins with `FrontierStore.register` (no root
+        upload — its first request is a child-create against the owner's
+        still-live parent row) and rides the next dispatch."""
+        while self._spawns:
+            spawns, self._spawns = self._spawns, []
+            for g, mkey, parent, var, values, mask in spawns:
+                if g.done:
+                    continue
+                gen = _mac_coroutine(
+                    g.csp,
+                    functools.partial(self._store.free, mkey),
+                    functools.partial(self._store.extract, mkey),
+                    g.supports_batch,
+                    g.batched_children,
+                    g.max_assignments,
+                    g.stats,
+                    n_active=g.n_active,
+                    root_spec=(parent, var, values),
+                    assigned0=mask,
+                    split_fn=g.split_fn,
+                )
+                try:
+                    req0 = gen.send(None)
+                except BudgetExceeded:
+                    # the group-total budget tripped while priming: the whole
+                    # group is exhausted — resolve it now (also drops this
+                    # batch's remaining spawns for the group)
+                    g.cover.discard(mkey)
+                    self._resolve_group(g, None, True, finished)
+                    continue
+                self._store.register(mkey, g.idx)
+                self._pending[mkey] = req0
+                self._gens[mkey] = gen
+                self._idx[mkey] = g.idx
+                self._root[mkey] = parent
+                self._stats[mkey] = g.stats
+                self._collect[mkey] = g.collect
+                self._group_of[mkey] = g
+                g.live.add(mkey)
+                self._order_dirty = True
+
+    def _finish_key(self, k, sol, exhausted: bool, finished: Dict) -> None:
+        """Route one coroutine's completion: solo searches report directly;
+        group members feed the group's verdict logic."""
+        stats = self._retire_key(k)
+        g = self._group_of.pop(k, None)
+        if g is None:
+            if exhausted:
+                stats.exhausted = True
+            finished[k] = (sol, stats)
+            return
+        g.live.discard(k)
+        complete = k in g.complete
+        g.cover.discard(k)
+        g.complete.discard(k)
+        if g.done:
+            return  # a straggler of an already-resolved group
+        if sol is not None:
+            self._resolve_group(g, sol, False, finished)
+        elif exhausted:
+            self._resolve_group(g, None, True, finished)
+        elif complete or not g.cover:
+            # a full restart came back UNSAT, or the cover tiles are all
+            # exhausted-free and empty — either is a proof
+            self._resolve_group(g, None, False, finished)
+
+    def _resolve_group(self, g: _Group, sol, exhausted: bool,
+                       finished: Dict) -> None:
+        """Settle a group's verdict: cancel the losers (rows free now), drop
+        its queued spawns, report it under the group key."""
+        g.done = True
+        g.result, g.exhausted = sol, exhausted
+        self._cancel_members(g)
+        if exhausted:
+            g.stats.exhausted = True
+        self._groups.pop(g.key, None)
+        finished[g.key] = (sol, g.stats)
+
+    def _retire_key(self, key) -> SearchStats:
+        """Drop every piece of driver state for one search key and reclaim its
+        store rows (safe mid-flight: the in-flight round's results for the key
+        are dropped at resolution). Returns the search's stats."""
         self._gens.pop(key).close()
         self._pending.pop(key, None)  # absent while the search is in flight
-        self._idx.pop(key)
-        self._root.pop(key)
-        self._collect.pop(key)
+        self._idx.pop(key, None)
+        self._root.pop(key, None)
+        self._collect.pop(key, None)
         self._store.release(key)
         self._order_dirty = True
         return self._stats.pop(key)
 
+    def _cancel_members(self, g: _Group) -> None:
+        """Retire every live member of ``g`` and drop its queued spawns,
+        billing each as a cancelled member."""
+        for k in list(g.live):
+            if k in self._gens:
+                self._retire_key(k)
+                self._group_of.pop(k, None)
+                g.stats.cancelled_members += 1
+        g.live.clear()
+        kept = [s for s in self._spawns if s[0] is not g]
+        g.stats.cancelled_members += len(self._spawns) - len(kept)
+        self._spawns = kept
+
+    def cancel(self, key) -> SearchStats:
+        """Evict a live search or a whole speculative group (e.g. deadline
+        expiry); frees its rows even if they are part of an in-flight round
+        (the round's results are simply dropped at resolution)."""
+        g = self._groups.pop(key, None)
+        if g is not None:
+            g.done = True
+            self._cancel_members(g)
+            return g.stats
+        return self._retire_key(key)
+
     @property
     def active_keys(self) -> List:
-        return sorted(self._gens)
+        return sorted(self._gens, key=_sort_key)
 
     def is_active(self, key) -> bool:
-        return key in self._gens
+        return key in self._gens or key in self._groups
 
     @property
     def has_work(self) -> bool:
-        return bool(self._pending) or self._inflight is not None
+        return (
+            bool(self._pending)
+            or bool(self._spawns)
+            or self._inflight is not None
+        )
 
     @property
     def n_pending_rows(self) -> int:
@@ -633,6 +1095,11 @@ class LockstepDriver:
             layout, pend, t0 = self._inflight
             self._inflight = None
             finished = self._advance(layout, pend, t0)
+        if self._spawns:
+            # admit split siblings NOW, before the next dispatch: their first
+            # request reads the parent row, whose owner is still paused on a
+            # yield — the row cannot be freed before this round resolves
+            self._admit_spawns(finished)
         if self._pending:
             specs, layout, net_idx = self._collect_rows()
             t0 = time.perf_counter()
@@ -648,7 +1115,7 @@ class LockstepDriver:
         order, with the np.repeat routing array rebuilt only when the round
         shape actually changed."""
         if self._order_dirty:
-            self._order = sorted(self._pending)
+            self._order = sorted(self._pending, key=_sort_key)
             self._order_dirty = False
             self._route_cache = None
         order = self._order
@@ -689,16 +1156,30 @@ class LockstepDriver:
         self.round_seconds.append(dt)
         self.launches += res.launches
         self.last_round = RoundInfo(r, len(layout), dt, res.launches)
-        values = _value_lists(res)
+        values = _value_lists(res.handles, res.value_row)
+        alt_values = (
+            _value_lists(res.handles, res.alt_row)
+            if res.alt_var is not None
+            else None
+        )
 
         off = 0
         finished: Dict[object, Tuple[Optional[List[int]], SearchStats]] = {}
+        # a speculative group's members share ONE stats object: per-REQUEST
+        # round quantities (rounds ridden, the round's launch bill) must be
+        # filed once per stats object, not once per member
+        billed = set()
         for k, b in layout:
             rows = slice(off, off + b)
             off += b
             if k not in self._gens:  # cancelled while the round was in flight
                 continue
             stats = self._stats[k]
+            first = id(stats) not in billed
+            billed.add(id(stats))
+            if first:
+                stats.rounds += 1
+            stats.rows += b
             if self._collect[k]:
                 # attribute the round's wall-clock over its REAL rows, so the
                 # per-search attributions sum exactly to the measured seconds
@@ -709,24 +1190,20 @@ class LockstepDriver:
                     else stats.revisions
                 )
                 counts.extend(int(v) for v in res.k[rows])
-                stats.launches += res.launches
+                if first:
+                    stats.launches += res.launches
             reply = _Reply(
                 res.handles[rows], res.consistent[rows], res.branch_var[rows],
                 values[rows],
+                None if res.alt_var is None else res.alt_var[rows],
+                None if alt_values is None else alt_values[rows],
             )
             try:
                 self._pending[k] = self._gens[k].send(reply)
             except StopIteration as stop:
-                finished[k] = (stop.value, stats)
+                self._finish_key(k, stop.value, False, finished)
             except BudgetExceeded:
-                stats.exhausted = True
-                finished[k] = (None, stats)
-        for k in finished:
-            del self._gens[k], self._idx[k], self._root[k]
-            del self._stats[k], self._collect[k]
-            self._pending.pop(k, None)
-            self._store.release(k)
-            self._order_dirty = True
+                self._finish_key(k, None, True, finished)
         return finished
 
 
@@ -743,6 +1220,9 @@ def solve_many(
     batched_children: bool = True,
     collect_stats: bool = True,
     telemetry: Optional[dict] = None,
+    split_budget: int = 0,
+    portfolio: int = 0,
+    portfolio_seed: int = 0,
 ) -> Tuple[List[Optional[List[int]]], List[SearchStats]]:
     """Run B independent MAC searches (instances sharing (n, d)) to completion.
 
@@ -762,8 +1242,15 @@ def solve_many(
     ``telemetry``, if a dict, is filled with round/transfer counters
     (``rounds``, ``rows_dispatched``, ``round_seconds_total`` and — on the
     device frontier — ``host_bytes_per_round`` vs the counterfactual
-    ``domain_bytes_per_round``); `benchmarks/bench_many.py` records these
-    into the ``frontier`` section of BENCH_engines.json.
+    ``domain_bytes_per_round``), plus the PER-INSTANCE rounds-to-solution
+    distribution (``rounds_per_instance`` summary + log2-binned
+    ``rounds_hist``) — batch totals hid exactly the stragglers this exists
+    to expose; `benchmarks/bench_many.py` records these into the
+    ``frontier`` section of BENCH_engines.json.
+
+    ``split_budget``/``portfolio`` turn each instance into a speculative
+    group (DESIGN.md §9; see `mac_solve`) — verdicts still match the
+    sequential oracle, per-instance stats become group totals.
 
     Returns (solutions, stats) as same-length lists, index-aligned with
     ``csps``.
@@ -782,12 +1269,19 @@ def solve_many(
                 max_assignments=max_assignments,
                 batched_children=batched_children,
                 collect_stats=collect_stats,
+                split_budget=split_budget,
+                portfolio=portfolio,
+                portfolio_seed=portfolio_seed,
             )
             sols.append(s)
             stats.append(st)
+        if telemetry is not None:
+            _fill_rounds_histogram(telemetry, stats)
         return sols, stats
 
     prepared = eng.prepare_many(csps)  # the ONLY preparation in the whole run
+    # speculative members multiply the worst-case live rows per instance
+    n_eff = len(csps) * (1 + max(0, split_budget) + max(0, portfolio))
     if eng.device_frontier:
         networks = eng.frontier_networks(prepared)
         store = eng.open_frontier(
@@ -796,7 +1290,7 @@ def solve_many(
             # its node + unvisited siblings): growth mid-run would recompile
             # the fused step for every round shape, and rows are n·d bools —
             # cheap enough that oversizing beats recompiling
-            capacity=frontier_capacity(len(csps), prepared.n_vars, prepared.dom_size),
+            capacity=frontier_capacity(n_eff, prepared.n_vars, prepared.dom_size),
         )
     else:
         # host store over the stacked/host-routed enforce_many dispatch; pad
@@ -806,10 +1300,14 @@ def solve_many(
         )
     driver = LockstepDriver(store, prepared.n_vars, count_unit=eng.count_unit)
     all_stats = [
-        driver.admit(
+        driver.admit_group(
             i,
             csp,
             idx=i,
+            split_budget=split_budget,
+            portfolio=portfolio,
+            portfolio_seed=portfolio_seed + i,
+            supports_batch=eng.supports_batch,
             batched_children=batched_children,
             max_assignments=max_assignments,
             collect_stats=collect_stats,
@@ -831,6 +1329,7 @@ def solve_many(
             launches_per_round=driver.launches / max(driver.rounds, 1),
             round_seconds_total=float(sum(driver.round_seconds)),
         )
+        _fill_rounds_histogram(telemetry, all_stats)
         if isinstance(store, FrontierTable):
             telemetry.update(
                 host_bytes_per_round=store.host_bytes_per_round,
@@ -840,6 +1339,28 @@ def solve_many(
                 extract_bytes=store.extract_bytes,
             )
     return sols, all_stats
+
+
+def _fill_rounds_histogram(telemetry: dict, all_stats: Sequence[SearchStats]) -> None:
+    """Per-instance rounds-to-solution distribution: summary percentiles plus
+    a log2-binned histogram (bin 0 counts instances that took 0 rounds; bin
+    j ≥ 1 counts 2^(j-1) ≤ rounds < 2^j). Batch totals average the stragglers
+    away — this is where a 4/32-solved workload becomes visible."""
+    rp = np.asarray([st.rounds for st in all_stats], dtype=np.int64)
+    if rp.size == 0:
+        telemetry["rounds_per_instance"] = {}
+        telemetry["rounds_hist"] = []
+        return
+    bins = np.bincount(
+        np.where(rp > 0, np.floor(np.log2(np.maximum(rp, 1))).astype(np.int64) + 1, 0)
+    )
+    telemetry["rounds_per_instance"] = {
+        "min": int(rp.min()),
+        "p50": float(np.median(rp)),
+        "p90": float(np.percentile(rp, 90)),
+        "max": int(rp.max()),
+    }
+    telemetry["rounds_hist"] = [int(c) for c in bins]
 
 
 def check_solution(csp: CSP, solution: List[int]) -> bool:

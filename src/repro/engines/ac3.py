@@ -22,6 +22,8 @@ class AC3Engine(Engine):
     # sequential baseline: a "batch" is just a host loop, so eager frontier
     # batching in search would waste work — enforce children lazily instead
     supports_batch = False
+    # every speculative row is a full host enforcement — keep duplication low
+    speculative_rows_hint = 8
 
     def _prepare_payload(self, csp: CSP):
         cons = np.asarray(csp.cons)

@@ -92,6 +92,8 @@ class EinsumEngine(Engine):
     stacked_many = True
     slot_table = True
     device_frontier = True
+    # stacked frontier rounds amortize extra rows — speculation is cheap here
+    speculative_rows_hint = 64
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn
@@ -147,6 +149,7 @@ class FullEngine(Engine):
     stacked_many = True
     slot_table = True
     device_frontier = True
+    speculative_rows_hint = 64
 
     def __init__(self, support_fn: SupportFn = einsum_support):
         self.support_fn = support_fn

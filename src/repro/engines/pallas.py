@@ -67,6 +67,8 @@ class _PallasEngine(Engine):
     stacked_many = True
     slot_table = True
     device_frontier = True
+    # stacked kernel rows are near-free up to the tile width
+    speculative_rows_hint = 64
 
     def __init__(
         self,

@@ -38,6 +38,8 @@ def _default_mesh() -> Mesh:
 @register
 class ShardedEngine(Engine):
     name = "sharded"
+    # no frontier fabric yet (host-side store): duplication pays per row
+    speculative_rows_hint = 16
 
     def __init__(
         self,

@@ -58,6 +58,33 @@ def bucket_for(n: int, d: int, n_floor: int = 8, d_floor: int = 4) -> Bucket:
     return Bucket(_round_up_pow2(n, n_floor), _round_up_pow2(d, d_floor))
 
 
+def speculative_budget(
+    split: int,
+    portfolio: int,
+    queue_depth: int,
+    spare_rows: int,
+    queue_limit: int,
+) -> tuple:
+    """Size one request's speculative duplication against live load
+    (DESIGN.md §9): speculation fills SLACK — it must never starve queued
+    requests of rows or admission throughput.
+
+    - At or beyond ``queue_limit`` queued requests (or with ≤ 1 spare row),
+      speculation is off entirely: ``(0, 0)``.
+    - Otherwise the request may claim ``spare_rows // (1 + queue_depth) - 1``
+      extra rows (its own row is not speculative) — an even hypothetical
+      share of the slack against everyone waiting, split-first (subtree
+      siblings reuse resident parent rows; portfolio racers re-upload roots).
+
+    Returns ``(split_eff, portfolio_eff)`` clamped budgets."""
+    if queue_depth >= queue_limit or spare_rows <= 1:
+        return 0, 0
+    allowed = max(0, spare_rows // (1 + queue_depth) - 1)
+    split_eff = min(max(0, split), allowed)
+    portfolio_eff = min(max(0, portfolio), allowed - split_eff)
+    return split_eff, portfolio_eff
+
+
 def pad_csp(csp: CSP, bucket: Bucket) -> CSP:
     """Pad a CSP into its bucket shape under the §2 contract. The AC closure
     and the MAC search restricted to the original (n, d) slice are unchanged."""

@@ -49,6 +49,11 @@ class ServiceMetrics:
         self.round_searches: Deque[int] = deque(maxlen=window)
         self.round_seconds: Deque[float] = deque(maxlen=window)
         self.round_launches: Deque[int] = deque(maxlen=window)
+        # speculation (DESIGN.md §9): rows each request consumed over its
+        # lifetime, and how many speculative members were spawned / cancelled
+        self.rows_per_request: Deque[int] = deque(maxlen=window)
+        self.speculative_members_total = 0
+        self.speculative_cancels_total = 0
 
     # --- recording ----------------------------------------------------------
 
@@ -80,6 +85,14 @@ class ServiceMetrics:
         self.round_searches.append(searches)
         self.round_seconds.append(seconds)
         self.round_launches.append(launches)
+
+    def record_request_rows(self, rows: int, members: int, cancelled: int) -> None:
+        """File one retired request's lifetime row consumption and speculation
+        outcome: ``members`` counts every search that ran for it (1 = no
+        speculation), ``cancelled`` the members killed when a sibling won."""
+        self.rows_per_request.append(rows)
+        self.speculative_members_total += max(0, members - 1)
+        self.speculative_cancels_total += cancelled
 
     # --- reduction ----------------------------------------------------------
 
@@ -122,4 +135,17 @@ class ServiceMetrics:
             "mean_searches_per_round": round(_mean(self.round_searches), 3),
             "mean_queue_depth": round(_mean(self.queue_depths), 3),
             "max_queue_depth": int(max(self.queue_depths, default=0)),
+            "median_rows_per_request": round(
+                float(np.median(np.fromiter(self.rows_per_request, float)))
+                if self.rows_per_request
+                else 0.0,
+                3,
+            ),
+            "speculative_members": self.speculative_members_total,
+            "speculative_cancel_rate": round(
+                self.speculative_cancels_total / self.speculative_members_total
+                if self.speculative_members_total
+                else 0.0,
+                3,
+            ),
         }

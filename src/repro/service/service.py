@@ -43,7 +43,7 @@ from repro.core.engine import (
     frontier_capacity,
 )
 from repro.core.search import HostFrontierStore, LockstepDriver, SearchStats, resolve_engine
-from .buckets import Bucket, bucket_for, pad_csp
+from .buckets import Bucket, bucket_for, pad_csp, speculative_budget
 from .cache import CacheEntry, PreparedNetworkCache, network_fingerprint
 from .metrics import ServiceMetrics
 
@@ -65,12 +65,15 @@ class SolveRequest:
     __slots__ = (
         "id", "csp", "n_vars", "dom_size", "bucket", "fingerprint",
         "deadline", "max_assignments", "status", "solution", "stats",
+        "split_budget", "portfolio",
         "submitted_at", "admitted_at", "finished_at", "_service",
     )
 
     def __init__(self, req_id: int, csp: CSP, bucket: Bucket, fingerprint: str,
                  submitted_at: float, deadline: Optional[float],
-                 max_assignments: Optional[int], service: "SolverService"):
+                 max_assignments: Optional[int], service: "SolverService",
+                 split_budget: Optional[int] = None,
+                 portfolio: Optional[int] = None):
         self.id = req_id
         self.csp = csp
         self.n_vars, self.dom_size = csp.dom.shape
@@ -79,6 +82,10 @@ class SolveRequest:
         self.submitted_at = submitted_at
         self.deadline = deadline
         self.max_assignments = max_assignments
+        # requested speculation ceilings (None = service defaults); admission
+        # clamps them against live load via buckets.speculative_budget
+        self.split_budget = split_budget
+        self.portfolio = portfolio
         self.status = RequestStatus.QUEUED
         self.solution: Optional[List[int]] = None
         self.stats: Optional[SearchStats] = None
@@ -142,6 +149,10 @@ class SolverService:
         max_active: Optional[int] = None,
         batched_children: bool = True,
         collect_stats: bool = True,
+        split_budget: int = 0,
+        portfolio: int = 0,
+        portfolio_seed: int = 0,
+        speculation_queue_limit: int = 4,
         n_floor: int = 8,
         d_floor: int = 4,
         clock: Optional[Callable[[], float]] = None,
@@ -156,6 +167,14 @@ class SolverService:
         self._max_active = max_active
         self._batched_children = batched_children
         self._collect_stats = collect_stats
+        if split_budget < 0 or portfolio < 0:
+            raise ValueError("split_budget / portfolio must be >= 0")
+        if speculation_queue_limit < 1:
+            raise ValueError("speculation_queue_limit must be >= 1")
+        self._split_budget = split_budget
+        self._portfolio = portfolio
+        self._portfolio_seed = portfolio_seed
+        self._speculation_queue_limit = speculation_queue_limit
         self._n_floor = n_floor
         self._d_floor = d_floor
         self._clock = clock if clock is not None else time.monotonic
@@ -173,10 +192,16 @@ class SolverService:
         *,
         deadline_s: Optional[float] = None,
         max_assignments: Optional[int] = None,
+        split_budget: Optional[int] = None,
+        portfolio: Optional[int] = None,
     ) -> SolveRequest:
         """Queue one CSP; returns immediately with a `SolveRequest` future.
         ``deadline_s`` is relative to submission; an in-flight request whose
-        deadline passes is cancelled at the next round boundary."""
+        deadline passes is cancelled at the next round boundary.
+        ``split_budget`` / ``portfolio`` override the service's speculation
+        defaults for this request (ceilings — admission still clamps them
+        against queue depth and spare frontier rows; the verdict is unchanged
+        either way, speculation only spends slack rows to finish sooner)."""
         now = self._clock()
         bucket = bucket_for(*csp.dom.shape, n_floor=self._n_floor, d_floor=self._d_floor)
         req = SolveRequest(
@@ -185,6 +210,8 @@ class SolverService:
             deadline=None if deadline_s is None else now + deadline_s,
             max_assignments=max_assignments,
             service=self,
+            split_budget=split_budget,
+            portfolio=portfolio,
         )
         self._queue.append(req)
         self.metrics.record_submit(now)
@@ -304,10 +331,29 @@ class SolverService:
                 self.engine.network_nbytes(req.bucket.n_p, req.bucket.d_p),
                 install,
             )
-            req.stats = rt.driver.admit(
+            # Size this request's speculation against live load: the spare-row
+            # pool is what the store ACTUALLY has free, clamped by the engine's
+            # advertised appetite, shared fairly with everyone still queued.
+            # Under pressure (deep queue / no slack) this degrades to plain
+            # admission — admit_group with (0, 0) is byte-identical to admit.
+            want_split = req.split_budget if req.split_budget is not None else self._split_budget
+            want_port = req.portfolio if req.portfolio is not None else self._portfolio
+            split_eff, port_eff = speculative_budget(
+                want_split,
+                want_port,
+                queue_depth=len(self._queue),
+                spare_rows=min(
+                    rt.store.spare_rows(), self.engine.speculative_rows_hint
+                ),
+                queue_limit=self._speculation_queue_limit,
+            )
+            req.stats = rt.driver.admit_group(
                 req.id,
                 padded,
                 idx=entry.slot,
+                split_budget=split_eff,
+                portfolio=port_eff,
+                portfolio_seed=self._portfolio_seed + req.id,
                 supports_batch=self.engine.supports_batch,
                 batched_children=self._batched_children,
                 n_active=req.n_vars,
@@ -348,6 +394,10 @@ class SolverService:
         self.metrics.record_finish(
             req.finished_at, req.finished_at - req.submitted_at, status.value
         )
+        if req.stats is not None:  # was admitted: file lifetime row consumption
+            self.metrics.record_request_rows(
+                req.stats.rows, req.stats.members, req.stats.cancelled_members
+            )
 
     # --- introspection ------------------------------------------------------
 

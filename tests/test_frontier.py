@@ -165,6 +165,70 @@ def test_frontier_rows_are_freed_and_reused():
     assert store.rows_live == 0 and store.capacity == cap
 
 
+def test_group_sibling_cancel_frees_rows_mid_flight():
+    """Speculative row groups (DESIGN.md §9): the first member to reach SAT
+    cancels its siblings MID-FLIGHT — their rows (including branch children
+    already resident) must return to the free list with no orphaned slots,
+    and the winner's verdict must match the sequential oracle."""
+    csps = generate_batch("model_rb", 2, n=10, hardness=1.0, seed=5)
+    eng = get_engine("einsum")
+    store, driver = _frontier_driver(eng, csps, capacity=64)
+    st = driver.admit_group(0, csps[0], idx=0, split_budget=3, portfolio=2)
+    results = _drive_to_completion(driver)
+    sol, _ = results[0]
+    ref_sol, _ = mac_solve(csps[0], engine="einsum")
+    assert (sol is None) == (ref_sol is None)
+    if sol is not None:
+        assert check_solution(csps[0], sol)
+    assert store.rows_live == 0  # every member's rows reclaimed
+    assert st.members >= 3 and st.cancelled_members <= st.members - 1
+    # the freed rows are genuinely reusable: a second group rides the same table
+    cap = store.capacity
+    driver.admit_group(1, csps[1], idx=1, split_budget=2, portfolio=1)
+    _drive_to_completion(driver)
+    assert store.rows_live == 0 and store.capacity == cap
+
+
+def test_group_cancel_mid_flight_releases_every_row():
+    """Cancelling the whole group while siblings are live (the service's
+    deadline path) frees every member's rows immediately."""
+    csp = generate("pigeonhole", n=6)  # UNSAT: the group cannot finish early
+    eng = get_engine("einsum")
+    store, driver = _frontier_driver(eng, [csp], capacity=64)
+    st = driver.admit_group(0, csp, idx=0, split_budget=2, portfolio=2)
+    driver.round()  # get the group genuinely in flight
+    driver.round()
+    assert driver.is_active(0)
+    cancelled = driver.cancel(0)
+    assert cancelled is st
+    # the pipelined in-flight round resolves on the next beat; afterwards no
+    # row may remain live and the driver must be fully drained
+    while driver.has_work:
+        driver.round()
+    assert store.rows_live == 0
+    assert not driver.is_active(0)
+
+
+def test_group_rounds_run_under_transfer_guard():
+    """Tree splitting is pure routing metadata: a split sibling's first
+    request is a child-create against the owner's still-resident parent row,
+    so speculative rounds stay free of implicit host<->device transfers."""
+    csps = generate_batch("model_rb", 2, n=10, hardness=1.0, seed=5)
+    eng = get_engine("einsum")
+    store, driver = _frontier_driver(eng, csps, capacity=64)
+    for i, c in enumerate(csps):
+        # admission uploads roots (explicit, sanctioned); splitting happens
+        # later, inside the guarded rounds
+        driver.admit_group(i, c, idx=i, split_budget=3)
+    with jax.transfer_guard("disallow"):
+        results = _drive_to_completion(driver)
+    for i, c in enumerate(csps):
+        ref_sol, _ = mac_solve(c, engine="einsum")
+        sol, _ = results[i]
+        assert (sol is None) == (ref_sol is None)
+    assert store.rows_live == 0
+
+
 def test_frontier_table_rejects_duplicate_keys_and_empty_rounds():
     csp = generate("nqueens", n=6)
     eng = get_engine("einsum")

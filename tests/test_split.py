@@ -1,0 +1,201 @@
+"""Speculative search determinism gate (ISSUE 7, DESIGN.md §9).
+
+Tree splitting and portfolio racing let ONE search occupy many frontier rows;
+the load-bearing claim is that speculation buys wall-clock only — the VERDICT
+is untouched. Every test here pits a speculative run against the sequential
+`mac_solve` oracle:
+
+- SAT stays SAT (the witness may differ — racers branch differently — but it
+  must satisfy the instance);
+- UNSAT stays UNSAT and is only declared when the verdict contract holds
+  (the cover set tiling the tree is exhausted, or a complete portfolio
+  member proved it alone);
+- a tripped assignment budget is inconclusive for the whole group, exactly
+  as it is for the sequential search.
+
+CI runs this module as its own matrix leg (`pytest -m parity`) twice —
+``JAX_ENABLE_X64`` off and on — because the verdict must not hinge on float
+width anywhere in the fixpoint.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import check_solution, mac_solve, solve_many
+from repro.core.search import (
+    PortfolioSpec,
+    _select_var_anti,
+    default_portfolio,
+)
+from repro.problems import generate, generate_batch
+from repro.service.buckets import speculative_budget
+
+pytestmark = pytest.mark.parity
+
+#: every stacked engine the fabric serves; pallas runs interpret-mode (tiny
+#: instances keep it in budget) and is still excluded from the non-parity legs
+ENGINES = [
+    "einsum",
+    "full",
+    "ac3",
+    pytest.param("pallas_packed", marks=pytest.mark.pallas),
+]
+
+
+def _mixed_batch(n_sat_biased=4, seed=0):
+    """Small mix straddling SAT and UNSAT so parity is checked on both."""
+    csps = list(generate_batch("model_rb", n_sat_biased, n=10, hardness=1.0,
+                               seed=seed))
+    csps.append(generate("pigeonhole", n=4))  # certainly UNSAT
+    csps.append(generate("coloring_random", n=10, edge_prob=0.5, k=3, seed=seed))
+    return csps
+
+
+def _assert_verdict_parity(csp, sol, oracle_sol):
+    assert (sol is None) == (oracle_sol is None)
+    if sol is not None:
+        assert check_solution(csp, sol)
+
+
+# --- mac_solve: one request, many rows ---------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_split_verdict_parity(engine):
+    for i, csp in enumerate(_mixed_batch(seed=11)):
+        oracle_sol, _ = mac_solve(csp, engine=engine)
+        sol, st = mac_solve(csp, engine=engine, split_budget=3)
+        _assert_verdict_parity(csp, sol, oracle_sol)
+        assert st.members >= 1 and st.cancelled_members < st.members + 3
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_portfolio_verdict_parity(engine):
+    for csp in _mixed_batch(seed=23):
+        oracle_sol, _ = mac_solve(csp, engine=engine)
+        sol, st = mac_solve(csp, engine=engine, portfolio=3)
+        _assert_verdict_parity(csp, sol, oracle_sol)
+        assert st.members == 4  # owner + 3 racers admitted up front
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_combined_solve_many_parity(engine):
+    # solve_many needs one shared shape; hardness-1.0 Model RB straddles the
+    # phase transition so the seeds mix SAT and UNSAT instances
+    csps = generate_batch("model_rb", 6, n=10, hardness=1.0, seed=37)
+    oracle = [mac_solve(c, engine=engine)[0] for c in csps]
+    sols, stats = solve_many(csps, engine=engine, split_budget=2, portfolio=2)
+    for csp, sol, ref in zip(csps, sols, oracle):
+        _assert_verdict_parity(csp, sol, ref)
+    assert all(st.members >= 3 for st in stats)  # owner + 2 racers at least
+
+
+def test_unsat_via_complete_portfolio_member():
+    """A portfolio racer is a COMPLETE search: its None-unexhausted return
+    proves UNSAT for the whole group without waiting for the cover."""
+    csp = generate("pigeonhole", n=5)
+    sol, st = mac_solve(csp, engine="einsum", split_budget=2, portfolio=2)
+    assert sol is None and not st.exhausted
+
+
+def test_budget_trip_is_inconclusive_for_the_group():
+    """When the shared assignment budget trips, the WHOLE group reports
+    exhausted — a speculative run may never convert a budget trip into a
+    false UNSAT."""
+    for seed in range(6):
+        csp = generate("model_rb", n=10, hardness=1.0, seed=seed)
+        sol, st = mac_solve(
+            csp, engine="einsum", max_assignments=5, split_budget=3, portfolio=2
+        )
+        oracle_sol, _ = mac_solve(csp, engine="einsum")
+        if sol is not None:
+            assert check_solution(csp, sol)  # a member won before the trip
+        else:
+            # None is either a genuine UNSAT (matching the oracle) or an
+            # explicitly inconclusive exhaustion — never a silent wrong verdict
+            assert st.exhausted or oracle_sol is None
+
+
+def test_plain_mac_solve_is_bit_identical():
+    """``split_budget=0, portfolio=0`` IS the sequential oracle — stats and
+    all (the default path never routes through the group machinery). Only the
+    wall-clock attribution may differ between two runs."""
+    import dataclasses
+
+    csp = generate("model_rb", n=10, hardness=1.0, seed=3)
+    ref_sol, ref_st = mac_solve(csp, engine="einsum")
+    sol, st = mac_solve(csp, engine="einsum", split_budget=0, portfolio=0)
+    assert sol == ref_sol
+    strip = lambda s: dataclasses.replace(s, enforce_seconds=[])
+    assert strip(st) == strip(ref_st)
+
+
+# --- service admission sizing ------------------------------------------------
+
+
+def test_speculative_budget_policy_units():
+    # empty queue, plenty of slack: the request gets what it asked for
+    assert speculative_budget(3, 2, 0, 16, 4) == (3, 2)
+    # queue at the limit, or no slack: speculation off entirely
+    assert speculative_budget(3, 2, 4, 16, 4) == (0, 0)
+    assert speculative_budget(3, 2, 0, 1, 4) == (0, 0)
+    # slack is shared with the queue, split-first
+    assert speculative_budget(8, 8, 1, 16, 4) == (7, 0)
+    assert speculative_budget(2, 8, 1, 16, 4) == (2, 5)
+    # never negative
+    assert speculative_budget(-3, -2, 0, 16, 4) == (0, 0)
+
+
+def test_service_speculation_verdict_parity():
+    from repro.service import RequestStatus, SolverService
+
+    csps = _mixed_batch(seed=41)
+    oracle = [mac_solve(c, engine="einsum")[0] for c in csps]
+    svc = SolverService("einsum", split_budget=3, portfolio=2, initial_slots=4)
+    reqs = [svc.submit(c) for c in csps]
+    svc.run_until_idle()
+    for csp, req, ref in zip(csps, reqs, oracle):
+        assert req.status is RequestStatus.DONE
+        _assert_verdict_parity(csp, req.solution, ref)
+    snap = svc.snapshot()
+    assert snap["median_rows_per_request"] > 0
+    assert 0.0 <= snap["speculative_cancel_rate"] <= 1.0
+
+
+def test_service_per_request_override_disables_speculation():
+    from repro.service import SolverService
+
+    csp = generate("model_rb", n=10, hardness=1.0, seed=7)
+    svc = SolverService("einsum", split_budget=3, portfolio=2, initial_slots=4)
+    req = svc.submit(csp, split_budget=0, portfolio=0)
+    req.result()
+    assert req.stats.members == 1
+    ref_sol, ref_st = mac_solve(csp, engine="einsum")
+    assert req.solution == ref_sol
+    assert req.stats.recurrences == ref_st.recurrences
+
+
+# --- heuristic diversity units ----------------------------------------------
+
+
+def test_anti_mrv_picks_largest_open_domain():
+    dom = np.zeros((4, 5), bool)
+    dom[0, :1] = True   # assigned-sized
+    dom[1, :2] = True
+    dom[2, :5] = True   # largest open
+    dom[3, :3] = True
+    assigned = np.array([True, False, False, False])
+    assert _select_var_anti(dom, assigned) == 2
+    # ties break to the lowest index, deterministically
+    dom[3, :5] = True
+    assert _select_var_anti(dom, assigned) == 2
+
+
+def test_default_portfolio_is_diverse_and_seeded():
+    specs = default_portfolio(5, seed=9)
+    assert len(specs) == 5
+    assert len({(s.heuristic, s.value_order) for s in specs}) == 5
+    assert all(isinstance(s, PortfolioSpec) for s in specs)
+    assert [s.seed for s in specs] == [9, 10, 11, 12, 13]
+    # wraps the cycle past its length rather than failing
+    assert len(default_portfolio(7, seed=0)) == 7
