@@ -20,6 +20,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import assign_np
 from repro.engines import available_engines, get_engine
 from repro.problems import generate
@@ -108,7 +109,14 @@ def main(engines=None, out_path: Path = OUT_PATH) -> dict:
     report = tracker.merge_section(
         "engines", results, out_path, extra={"platform": platform.platform()}
     )
-    print(f"engines: wrote {out_path}")
+    # registry ride-along: distinct kernel program families built and
+    # autotune searches run during this sweep (ungated "obs" section)
+    tracker.merge_section("obs", obs.snapshot(), out_path)
+    print(
+        f"engines: wrote {out_path} "
+        f"(fn_builds={obs.REGISTRY.counter('kernels.fn_builds')}, "
+        f"autotuned={obs.REGISTRY.counter('autotune.tuned_buckets')})"
+    )
     return report
 
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 import time
 from pathlib import Path
 
+from repro import obs
 from repro.core import mac_solve, solve_many
 from repro.core.search import check_solution
 from repro.problems import generate_batch
@@ -53,10 +54,16 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
     seq_s = time.perf_counter() - t0
 
     telemetry: dict = {}
+    rpi_before = len(obs.REGISTRY.samples("many.rounds_per_instance"))
     t0 = time.perf_counter()
     sols, _ = solve_many(csps, engine=engine, telemetry=telemetry,
                          **(speculation or {}))
     many_s = time.perf_counter() - t0
+    # solve_many published this workload's figures into the obs registry
+    # (one launches_per_solve sample per call, one rounds sample per
+    # instance) — the row reads them back from there, not from telemetry
+    lps_samples = obs.REGISTRY.samples("many.launches_per_solve")
+    rpi_delta = list(obs.REGISTRY.samples("many.rounds_per_instance"))[rpi_before:]
 
     if speculation:
         # speculative members race with different heuristics, so the WITNESS
@@ -90,7 +97,8 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
         "launches": telemetry.get("launches", 0),
         "launches_per_round": round(telemetry.get("launches_per_round", 0.0), 3),
         "launches_per_solve": round(
-            telemetry.get("launches", 0) / max(count, 1), 3
+            lps_samples[-1] if lps_samples
+            else telemetry.get("launches", 0) / max(count, 1), 3
         ),
         "fused_fixpoint": bool(telemetry.get("fused_fixpoint", False)),
     }
@@ -101,6 +109,15 @@ def bench_workload(family: str, knobs: dict, count: int, engine: str = "einsum",
         # line (p90/max vs p50) plus the log2 histogram
         many_row["rounds_per_instance"] = telemetry["rounds_per_instance"]
         many_row["rounds_hist"] = telemetry["rounds_hist"]
+    elif rpi_delta:
+        # registry-only path: summarize the per-instance samples solve_many
+        # observed into the same {min,p50,p90,max} shape telemetry uses
+        many_row["rounds_per_instance"] = {
+            "min": int(min(rpi_delta)),
+            "p50": int(obs.percentile(rpi_delta, 50)),
+            "p90": int(obs.percentile(rpi_delta, 90)),
+            "max": int(max(rpi_delta)),
+        }
     frontier_row = None
     if telemetry.get("device_frontier"):
         frontier_row = {
@@ -154,6 +171,8 @@ def main(out_path: Path = OUT_PATH) -> list:
         )
     tracker.merge_section("many", rows, out_path)
     tracker.merge_section("frontier", frontier, out_path)
+    # process-wide registry snapshot rides along (ungated "obs" section)
+    tracker.merge_section("obs", obs.snapshot(), out_path)
     print(f"many: wrote {out_path}")
     return rows
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 import time
 from pathlib import Path
 
+from repro import obs
 from repro.service import (
     FastForwardClock,
     SolverService,
@@ -101,6 +102,28 @@ def bench_trace(label: str, families, rate: float, duration: float,
     }
 
 
+def dump_obs_artifacts(out_dir: Path) -> list:
+    """With tracing on (``REPRO_TRACE=1``), drop the run's obs artifacts next
+    to the tracker file: the full run payload (registry snapshot + spans,
+    consumable by ``python -m repro.obs summarize``) and the Perfetto/Chrome
+    trace ready for ui.perfetto.dev. No-op (returns []) when tracing is off."""
+    if not obs.enabled():
+        return []
+    out_dir.mkdir(parents=True, exist_ok=True)
+    run_path = out_dir / "service_obs_run.json"
+    trace_path = out_dir / "trace.perfetto.json"
+    tracer = obs.get_tracer()
+    obs.dump_run(run_path, tracer=tracer)
+    obs.write_trace(trace_path, tracer)
+    spans = tracer.snapshot_spans()
+    cov = obs.child_coverage(spans, "driver.round")
+    print(
+        f"service: obs run -> {run_path} ({len(spans)} spans, "
+        f"driver.round child coverage {cov:.1%}); trace -> {trace_path}"
+    )
+    return [run_path, trace_path]
+
+
 def main(quick: bool = True, out_path: Path = OUT_PATH) -> list:
     rows = [
         bench_trace(label, fams, rate, dur, engine=engine, kind=kind,
@@ -116,7 +139,11 @@ def main(quick: bool = True, out_path: Path = OUT_PATH) -> list:
             f"hit_rate={r['cache_hit_rate']:.3f}"
         )
     tracker.merge_section("service", rows, out_path)
+    # process-wide registry figures ride along as an ungated "obs" section —
+    # per-solve rates and speculation outcomes across every trace above
+    tracker.merge_section("obs", obs.snapshot(), out_path)
     print(f"service: wrote {out_path}")
+    dump_obs_artifacts(out_path.parent / "artifacts")
     return rows
 
 

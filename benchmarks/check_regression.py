@@ -189,11 +189,13 @@ def index_service(report: dict) -> dict:
 
 
 def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
-    """Gate the service section: p95 or p99 tail latency up, or throughput
-    down, by more than ``tolerance``× fails. The p99 gate exists specifically
-    for speculation: duplication that helps the median but starves the queue
-    shows up in the extreme tail first. Same missing/new-cell policy as
-    engine cells."""
+    """Gate the service section: p95 or p99 tail latency up, throughput
+    down, or per-round kernel launches up, by more than ``tolerance``× fails.
+    The p99 gate exists specifically for speculation: duplication that helps
+    the median but starves the queue shows up in the extreme tail first. The
+    launches gate holds the fused-fixpoint claim: a round splitting back into
+    per-recurrence launches regresses here before it shows up as latency.
+    Same missing/new-cell policy as engine cells."""
     failures = []
     base_rows, fresh_rows = index_service(baseline), index_service(fresh)
     eps = 1e-3  # one rounding quantum floor, as for the latency cells
@@ -211,14 +213,23 @@ def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
             else 1.0
         )
         tput_ratio = (b["throughput_rps"] + eps) / (f["throughput_rps"] + eps)
-        worst = max(lat_ratio, p99_ratio, tput_ratio)
+        # pre-gate baselines may lack the launches figure; missing = pass
+        lpr_ratio = (
+            (f["mean_launches_per_round"] + eps)
+            / (b["mean_launches_per_round"] + eps)
+            if b.get("mean_launches_per_round") is not None
+            and f.get("mean_launches_per_round") is not None
+            else 1.0
+        )
+        worst = max(lat_ratio, p99_ratio, tput_ratio, lpr_ratio)
         status = "FAIL" if worst > tolerance else "ok"
         print(
             f"{status:4s} service:{engine:7s} {trace:34s} "
             f"p95 {b['p95_ms']:8.1f} -> {f['p95_ms']:8.1f} ms ({lat_ratio:.2f}x), "
             f"p99 ({p99_ratio:.2f}x), "
             f"tput {b['throughput_rps']:.2f} -> {f['throughput_rps']:.2f} rps "
-            f"({1 / max(tput_ratio, eps):.2f}x)"
+            f"({1 / max(tput_ratio, eps):.2f}x), "
+            f"launches/round ({lpr_ratio:.2f}x)"
         )
         if lat_ratio > tolerance:
             failures.append(
@@ -234,6 +245,12 @@ def compare_service(baseline: dict, fresh: dict, tolerance: float) -> list:
             failures.append(
                 f"service {engine} {trace}: throughput_rps {b['throughput_rps']} -> "
                 f"{f['throughput_rps']} ({tput_ratio:.2f}x drop > {tolerance}x)"
+            )
+        if lpr_ratio > tolerance:
+            failures.append(
+                f"service {engine} {trace}: mean_launches_per_round "
+                f"{b['mean_launches_per_round']} -> {f['mean_launches_per_round']} "
+                f"({lpr_ratio:.2f}x growth > {tolerance}x)"
             )
     for key in sorted(set(fresh_rows) - set(base_rows)):
         print(f"new  service:{key[0]:7s} {key[1]:34s} (no baseline — passes)")

@@ -69,7 +69,19 @@ def _summarize(key: str, value) -> Optional[dict]:
             }
         if key == "many":
             return {
-                f"{r['engine']}/{r['family']}": r["many_instances_per_s"]
+                f"{r['engine']}/{r['family']}": {
+                    "many_instances_per_s": r["many_instances_per_s"],
+                    # work-per-answer trend (obs registry figures): kernel
+                    # launches amortized per solved instance, and the shape
+                    # of the per-instance round distribution
+                    "launches_per_solve": r.get("launches_per_solve", 0.0),
+                    "rounds_p50": round(
+                        float(r.get("rounds_per_instance", {}).get("p50", 0)), 2
+                    ),
+                    "rounds_p90": round(
+                        float(r.get("rounds_per_instance", {}).get("p90", 0)), 2
+                    ),
+                }
                 for r in value
             }
         if key == "service":
@@ -80,6 +92,8 @@ def _summarize(key: str, value) -> Optional[dict]:
                     # speculation occupancy trend: rows one request consumes
                     # over its lifetime (1/round when speculation is off)
                     "median_rows_per_request": r.get("median_rows_per_request", 0.0),
+                    # fused-fixpoint health: >1 means rounds split launches
+                    "mean_launches_per_round": r.get("mean_launches_per_round", 0.0),
                 }
                 for r in value
             }

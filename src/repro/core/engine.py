@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .csp import CSP
 from .rtac import EnforceResult
 
@@ -271,7 +273,11 @@ class SlotPool:
                 f"install: csp shape {tuple(csp.dom.shape)} != pool bucket "
                 f"({self.n_vars}, {self.dom_size})"
             )
-        self._nets[slot] = self._prepare_slot(slot, csp)
+        # the service's one O(n²d²) admission step — worth its own span
+        with obs.span("slot.install", cat="engine", slot=slot,
+                      n=self.n_vars, d=self.dom_size):
+            self._nets[slot] = self._prepare_slot(slot, csp)
+        obs.REGISTRY.counter_add("slots.installed")
 
     def _prepare_slot(self, slot: int, csp: CSP):
         """Backend hook: build the slot's resident form. The generic pool keeps
@@ -661,7 +667,9 @@ class FrontierTable:
         return 2.0 * self.rows_pow2 * self.n_vars * self.dom_size / max(self.rounds, 1)
 
     def _count_d2h(self, *arrays) -> None:
-        self.d2h_bytes += sum(np.asarray(a).nbytes for a in arrays)
+        nbytes = sum(np.asarray(a).nbytes for a in arrays)
+        self.d2h_bytes += nbytes
+        obs.REGISTRY.counter_add("frontier.d2h_bytes", nbytes)
 
     def _alloc(self, key) -> int:
         if not self._free_rows:
@@ -767,17 +775,29 @@ class FrontierTable:
                 (parent, var, val, dest_arr, np.asarray(net_idx, np.int32)), r_p
             )
         )
-        self.h2d_bytes += sum(int(a.nbytes) for a in args)
+        h2d = sum(int(a.nbytes) for a in args)
+        self.h2d_bytes += h2d
+        obs.REGISTRY.counter_add("frontier.h2d_bytes", h2d)
         self.rounds += 1
         self.rows_dispatched += r
         self.rows_padded += r_p
         self.rows_pow2 += next_pow2(r)
-        with warnings.catch_warnings():
-            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
-            self._buf, self._abuf, *meta = _frontier_step(
-                self._buf, self._abuf, self._networks(), *args, fix=self._fix,
-                want_alt=self._want_alt,
-            )
+        # the launch span brackets the dispatch call: under the default async
+        # timing it measures launch-side cost only; under timing="fenced" the
+        # fence blocks on the round's metadata, so the span is the device
+        # round itself (block_until_ready moves no data — the transfer-guard
+        # audit stays clean, and verdicts are bit-identical either way)
+        with obs.span("kernel.launch", cat="kernel", rows=r, padded=r_p,
+                      fused=self.fused_fixpoint):
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+                self._buf, self._abuf, *meta = _frontier_step(
+                    self._buf, self._abuf, self._networks(), *args, fix=self._fix,
+                    want_alt=self._want_alt,
+                )
+            obs.fence(meta)
+        obs.REGISTRY.gauge_set("frontier.rows_live", self.rows_live)
+        obs.REGISTRY.gauge_set("frontier.capacity", self.capacity)
         return _PendingFrontierRound(self, tuple(meta), dest, [s.key for s in specs], r)
 
 

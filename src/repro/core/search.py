@@ -68,6 +68,8 @@ from typing import (
 
 import numpy as np
 
+from repro import obs
+
 from .ac3 import assign_np
 from .csp import CSP
 from .engine import (
@@ -490,7 +492,11 @@ class HostFrontierStore:
         doms = np.stack(rows)
         if net_idx is None:
             net_idx = np.fromiter((self._net_of[s.key] for s in specs), np.int32, r)
-        res = self._enforce_rows(doms, chs, np.asarray(net_idx, np.int32), roots)
+        # host stores block inside the dispatch (np.asarray below), so this
+        # span IS the enforcement wall-clock, fenced or not
+        with obs.span("kernel.launch", cat="kernel", rows=r):
+            res = self._enforce_rows(doms, chs, np.asarray(net_idx, np.int32), roots)
+            obs.fence(res.dom)
         dom_out = np.asarray(res.dom)[:r]
         cons = np.atleast_1d(np.asarray(res.consistent))[:r]
         k = np.atleast_1d(np.asarray(res.n_recurrences))[:r]
@@ -566,7 +572,12 @@ def _drive_single(store: HostFrontierStore, root: int, gen: _MacGen,
                     for v in req.values
                 ]
             t0 = time.perf_counter()
-            res = store.dispatch(specs).resolve()
+            with obs.span("driver.round", cat="driver", rows=len(specs)):
+                with obs.span("frontier.step", cat="driver"):
+                    res = store.dispatch(specs).resolve()
+            obs.REGISTRY.counter_add("driver.rounds")
+            obs.REGISTRY.counter_add("driver.rows", len(specs))
+            obs.REGISTRY.counter_add("driver.launches", res.launches)
             stats.rounds += 1
             stats.rows += len(specs)
             if collect_stats:
@@ -1042,15 +1053,20 @@ class LockstepDriver:
     def _cancel_members(self, g: _Group) -> None:
         """Retire every live member of ``g`` and drop its queued spawns,
         billing each as a cancelled member."""
-        for k in list(g.live):
-            if k in self._gens:
-                self._retire_key(k)
-                self._group_of.pop(k, None)
-                g.stats.cancelled_members += 1
-        g.live.clear()
-        kept = [s for s in self._spawns if s[0] is not g]
-        g.stats.cancelled_members += len(self._spawns) - len(kept)
-        self._spawns = kept
+        before = g.stats.cancelled_members
+        with obs.span("group.cancel", cat="driver", n=len(g.live)):
+            for k in list(g.live):
+                if k in self._gens:
+                    self._retire_key(k)
+                    self._group_of.pop(k, None)
+                    g.stats.cancelled_members += 1
+            g.live.clear()
+            kept = [s for s in self._spawns if s[0] is not g]
+            g.stats.cancelled_members += len(self._spawns) - len(kept)
+            self._spawns = kept
+        obs.REGISTRY.counter_add(
+            "driver.cancelled_members", g.stats.cancelled_members - before
+        )
 
     def cancel(self, key) -> SearchStats:
         """Evict a live search or a whole speculative group (e.g. deadline
@@ -1091,23 +1107,31 @@ class LockstepDriver:
         stores the launch is asynchronous — it resolves on the NEXT call."""
         self.last_round = None
         finished: Dict[object, Tuple[Optional[List[int]], SearchStats]] = {}
-        if self._inflight is not None:
-            layout, pend, t0 = self._inflight
-            self._inflight = None
-            finished = self._advance(layout, pend, t0)
-        if self._spawns:
-            # admit split siblings NOW, before the next dispatch: their first
-            # request reads the parent row, whose owner is still paused on a
-            # yield — the row cannot be freed before this round resolves
-            self._admit_spawns(finished)
-        if self._pending:
-            specs, layout, net_idx = self._collect_rows()
-            t0 = time.perf_counter()
-            pend = self._store.dispatch(specs, net_idx)
-            if getattr(self._store, "pipelined", False):
-                self._inflight = (layout, pend, t0)
-            else:
-                finished.update(self._advance(layout, pend, t0))
+        with obs.span("driver.round", cat="driver"):
+            if self._inflight is not None:
+                layout, pend, t0 = self._inflight
+                self._inflight = None
+                with obs.span("round.resolve", cat="driver", rows=sum(b for _, b in layout)):
+                    finished = self._advance(layout, pend, t0)
+            if self._spawns:
+                # admit split siblings NOW, before the next dispatch: their
+                # first request reads the parent row, whose owner is still
+                # paused on a yield — the row cannot be freed before this
+                # round resolves
+                with obs.span("group.spawn", cat="driver", n=len(self._spawns)):
+                    self._admit_spawns(finished)
+            if self._pending:
+                with obs.span("frontier.step", cat="driver") as _sp:
+                    specs, layout, net_idx = self._collect_rows()
+                    if _sp is not None:
+                        _sp.args["rows"] = len(specs)
+                    t0 = time.perf_counter()
+                    pend = self._store.dispatch(specs, net_idx)
+                    if getattr(self._store, "pipelined", False):
+                        self._inflight = (layout, pend, t0)
+                if self._inflight is None:
+                    with obs.span("round.resolve", cat="driver", rows=len(specs)):
+                        finished.update(self._advance(layout, pend, t0))
         return finished
 
     def _collect_rows(self):
@@ -1156,6 +1180,10 @@ class LockstepDriver:
         self.round_seconds.append(dt)
         self.launches += res.launches
         self.last_round = RoundInfo(r, len(layout), dt, res.launches)
+        obs.REGISTRY.counter_add("driver.rounds")
+        obs.REGISTRY.counter_add("driver.rows", r)
+        obs.REGISTRY.counter_add("driver.launches", res.launches)
+        obs.REGISTRY.counter_add("driver.recurrences", int(np.sum(res.k)))
         values = _value_lists(res.handles, res.value_row)
         alt_values = (
             _value_lists(res.handles, res.alt_row)
@@ -1318,6 +1346,13 @@ def solve_many(
     while driver.has_work:
         for i, (sol, _st) in driver.round().items():
             sols[i] = sol
+    # per-instance distributions into the central registry (DESIGN.md §10):
+    # this is where tracker history and the obs CLI read straggler spread
+    # and the launches-per-solve claim from, tracing on or off
+    obs.REGISTRY.counter_add("many.solves", len(csps))
+    obs.REGISTRY.observe("many.launches_per_solve", driver.launches / len(csps))
+    for st in all_stats:
+        obs.REGISTRY.observe("many.rounds_per_instance", st.rounds)
     if telemetry is not None:
         telemetry.update(
             engine=eng.name,

@@ -41,6 +41,7 @@ import time
 from pathlib import Path
 from typing import Dict, List, Optional
 
+from repro import obs
 from repro.core.engine import next_pow2
 
 SCHEMA = "repro-autotune/v1"
@@ -267,13 +268,21 @@ def tune(
     if kind not in ("dense", "packed"):
         raise ValueError(f"unknown kernel kind {kind!r}")
     r = next_pow2(max(int(r), 1))
-    dims, net_g, dom_p, ch_p = _tune_workload(kind, n_p, d_p, r, interpret)
-    w = dims[2] if kind == "packed" else 0
-    best_cfg, best_t = None, float("inf")
-    for cfg in candidate_configs(n_p, r):
-        t = _time_candidate(kind, dims, net_g, dom_p, ch_p, cfg, interpret, repeats)
-        if t < best_t:
-            best_cfg, best_t = cfg, t
+    t_search0 = time.perf_counter()
+    with obs.span("autotune.search", cat="autotune", kind=kind,
+                  n=n_p, d=d_p, r=r) as _sp:
+        dims, net_g, dom_p, ch_p = _tune_workload(kind, n_p, d_p, r, interpret)
+        w = dims[2] if kind == "packed" else 0
+        best_cfg, best_t = None, float("inf")
+        candidates = candidate_configs(n_p, r)
+        for cfg in candidates:
+            t = _time_candidate(kind, dims, net_g, dom_p, ch_p, cfg, interpret, repeats)
+            if t < best_t:
+                best_cfg, best_t = cfg, t
+        if _sp is not None:
+            _sp.args["candidates"] = len(candidates)
+    obs.counter_add("autotune.tuned_buckets")
+    obs.observe("autotune.search_seconds", time.perf_counter() - t_search0)
     _CONFIGS[bucket_key(kind, n_p, d_p, w, r)] = best_cfg
     if save:
         save_cache(path)

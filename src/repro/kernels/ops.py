@@ -27,12 +27,21 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import rtac
 from repro.core.csp import CSP
 from repro.core.engine import pad_dom, pad_network, padded_shape
 from . import autotune, bitpack_support, ref, rtac_support
 
 Array = jax.Array
+
+
+def _count_build(name: str) -> None:
+    """Registry tick for one kernel-closure construction. The factories are
+    ``lru_cache``-d, so this fires once per distinct (shape, blocks, mode)
+    program family — the compiled-program census the obs CLI reports."""
+    obs.counter_add("kernels.fn_builds")
+    obs.counter_add(f"kernels.fn_builds.{name}")
 
 #: value-axis tile multiple both kernels pad d to (the one place it is set —
 #: engines sizing slot tables without a CSP import this)
@@ -69,6 +78,7 @@ def _cached(kind: str, csp: CSP, block_rx: int, block_ry: int, build):
 
 @functools.lru_cache(maxsize=None)
 def _dense_revise_fn(n_p: int, d_p: int, block_rx: int, block_ry: int, interpret: bool):
+    _count_build("dense_revise")
     def revise_fn(net, dom, changed):
         cons2, mask_u8 = net
         viol = rtac_support.dense_revise(
@@ -108,6 +118,7 @@ def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
 def _dense_rows_fn(n_p: int, d_p: int, block_rx: int, block_ry: int, interpret: bool):
     """Stacked revise-rows closure (rtac.ReviseRowsFn) for the dense u8 kernel:
     ``net_g`` leaves carry a leading row axis (gathered from the slot table)."""
+    _count_build("dense_rows")
 
     def revise_rows(net_g, doms, changed):
         cons_g, mask_g = net_g  # (R, n_p*d_p, n_p*d_p) u8, (R, n_p, n_p) u8
@@ -143,6 +154,7 @@ def pack_network(cons: Array, n_p: int, d_p: int) -> Tuple[Array, int]:
 def _packed_revise_fn(
     n_p: int, d_p: int, w: int, block_rx: int, block_ry: int, interpret: bool
 ):
+    _count_build("packed_revise")
     def revise_fn(net, dom, changed):
         cons_p2, mask_u8 = net
         dom_pk = ref.pack_bits_ref(dom).reshape(1, n_p * w)
@@ -195,6 +207,7 @@ def _dense_frontier_fn(block_rx: int, block_ry: int, interpret: bool):
     traced program pads R parent closures into kernel coordinates, applies the
     batched Alg. 2 assignment (`rtac_support.assign_padded_rows`), and runs
     the stacked-kernel fixpoint — the device never sees a host-built domain."""
+    _count_build("dense_frontier")
 
     def assign_enforce_rows(net_g, doms, var, val, idx):
         r, n, d = doms.shape
@@ -213,6 +226,7 @@ def _packed_frontier_fn(block_rx: int, block_ry: int, interpret: bool):
     """Fused assign+revise frontier dispatch for the bitpacked u32 kernel
     (same shape as `_dense_frontier_fn`; the fixpoint packs row domains fresh
     each recurrence, the networks ride gathered from the packed slot table)."""
+    _count_build("packed_frontier")
 
     def assign_enforce_rows(net_g, doms, var, val, idx):
         r, n, d = doms.shape
@@ -234,6 +248,7 @@ def _packed_rows_fn(
     """Stacked revise-rows closure (rtac.ReviseRowsFn) for the bitpacked u32
     kernel: row domains are packed fresh (O(R·n·d)); the packed networks ride
     gathered from the (C, n·d, n·W) slot table."""
+    _count_build("packed_rows")
 
     def revise_rows(net_g, doms, changed):
         cons_g, mask_g = net_g  # (R, n_p*d_p, n_p*w) u32, (R, n_p, n_p) u8
@@ -281,6 +296,7 @@ def _dense_fixpoint_rows_fn(
     """Stacked one-launch fixpoint for the dense u8 kernel. Same signature as
     `rtac.enforce_rows_generic` (net_g, dom_p, ch_p -> EnforceResult in padded
     coordinates) so engines can swap it for the stepped path wholesale."""
+    _count_build("dense_fixpoint_rows")
 
     def fixpoint_rows(net_g, doms, changed):
         cons_g, mask_g = net_g
@@ -314,6 +330,7 @@ def _packed_fixpoint_rows_fn(
     """Stacked one-launch fixpoint for the bitpacked u32 kernel: row domains
     are packed ONCE on entry and stay (n, W) u32 words in VMEM across every
     in-kernel recurrence (the stepped path re-packs each iteration)."""
+    _count_build("packed_fixpoint_rows")
 
     def fixpoint_rows(net_g, doms, changed):
         cons_g, mask_g = net_g
@@ -357,6 +374,7 @@ def _dense_frontier_fused_fn(block_rx: int, block_ry: int, interpret: bool):
     """One-launch-per-round frontier dispatch for the dense u8 kernel: pad,
     batched Alg. 2 assignment, seed — then a single fused fixpoint launch in
     place of `_dense_frontier_fn`'s stepped while_loop."""
+    _count_build("dense_frontier_fused")
 
     def assign_enforce_rows(net_g, doms, var, val, idx):
         r, n, d = doms.shape
@@ -376,6 +394,7 @@ def _packed_frontier_fused_fn(block_rx: int, block_ry: int, interpret: bool):
     """One-launch-per-round frontier dispatch for the bitpacked u32 kernel
     (shape-identical to `_packed_frontier_fn`; domains pack once on entry and
     the recurrence runs on u32 word planes pinned in VMEM)."""
+    _count_build("packed_frontier_fused")
 
     def assign_enforce_rows(net_g, doms, var, val, idx):
         r, n, d = doms.shape

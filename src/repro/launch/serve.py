@@ -7,12 +7,19 @@ under load is real), and prints sustained throughput plus tail latency.
 
     python -m repro.launch.serve --trace poisson \
         --families model_rb,coloring_random --rate 8 --duration 20 --engine einsum
+
+With ``--trace-out run.json`` (or ``REPRO_TRACE=1`` in the environment) the
+replay runs under the `repro.obs` tracer and drops the full run payload plus
+a ``run.perfetto.json`` timeline next to it — load the latter in
+ui.perfetto.dev, or ``python -m repro.obs summarize run.json``.
 """
 
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
+from repro import obs
 from repro.service import (
     DEFAULT_VARIANTS,
     FastForwardClock,
@@ -37,10 +44,16 @@ def serve(
     max_assignments: int = None,
     initial_slots: int = 8,
     quiet: bool = False,
+    trace_out: str = None,
+    trace_timing: str = "async",
 ):
-    """Run one trace replay; returns (service, requests)."""
+    """Run one trace replay; returns (service, requests). With ``trace_out``
+    set, the replay is traced (enabling the obs tracer if the environment
+    didn't already) and the run payload + Perfetto timeline land on disk."""
     if trace not in TRACES:
         raise ValueError(f"unknown trace {trace!r}; available: {list(TRACES)}")
+    if trace_out and not obs.enabled():
+        obs.enable(timing=trace_timing)
     events = poisson_trace(list(families), rate=rate, duration=duration, seed=seed)
     clock = FastForwardClock()
     svc = SolverService(
@@ -96,6 +109,20 @@ def serve(
             f"[serve] outcomes: {n_solved} SAT, {n_unsat} UNSAT"
             + (f", {n_capped} budget-capped (inconclusive)" if n_capped else "")
         )
+    if trace_out and obs.enabled():
+        run_path = Path(trace_out)
+        tracer = obs.get_tracer()
+        obs.dump_run(run_path, tracer=tracer)
+        perfetto_path = run_path.with_name(run_path.stem + ".perfetto.json")
+        obs.write_trace(perfetto_path, tracer)
+        if not quiet:
+            spans = tracer.snapshot_spans()
+            cov = obs.child_coverage(spans, "driver.round")
+            print(
+                f"[serve] obs run -> {run_path} ({len(spans)} spans, "
+                f"driver.round child coverage {cov:.1%}); "
+                f"timeline -> {perfetto_path}"
+            )
     return svc, requests
 
 
@@ -115,6 +142,16 @@ def main(argv=None):
     ap.add_argument("--deadline", type=float, default=None, help="per-request deadline (s)")
     ap.add_argument("--budget", type=int, default=None, help="per-request assignment budget")
     ap.add_argument("--slots", type=int, default=8, help="initial slots per bucket")
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="trace the replay and write the obs run payload here "
+             "(a .perfetto.json timeline lands next to it)",
+    )
+    ap.add_argument(
+        "--trace-timing", default="async", choices=("async", "fenced"),
+        help="span timing mode: 'fenced' blocks on device results inside "
+             "kernel.launch spans so durations are true device time",
+    )
     args = ap.parse_args(argv)
     serve(
         families=[f.strip() for f in args.families.split(",") if f.strip()],
@@ -127,6 +164,8 @@ def main(argv=None):
         deadline_s=args.deadline,
         max_assignments=args.budget,
         initial_slots=args.slots,
+        trace_out=args.trace_out,
+        trace_timing=args.trace_timing,
     )
 
 

@@ -21,6 +21,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.csp import CSP
 from repro.core.engine import next_pow2, pad_dom
 
@@ -76,12 +77,26 @@ def speculative_budget(
       share of the slack against everyone waiting, split-first (subtree
       siblings reuse resident parent rows; portfolio racers re-upload roots).
 
-    Returns ``(split_eff, portfolio_eff)`` clamped budgets."""
+    Returns ``(split_eff, portfolio_eff)`` clamped budgets. Grant/deny
+    outcomes publish into the obs registry (``speculation.*``) — the
+    feedback signal the ROADMAP's adaptive-speculation item reads."""
+    wanted = max(0, split) + max(0, portfolio)
     if queue_depth >= queue_limit or spare_rows <= 1:
+        if wanted:
+            obs.counter_add("speculation.denied")
         return 0, 0
     allowed = max(0, spare_rows // (1 + queue_depth) - 1)
     split_eff = min(max(0, split), allowed)
     portfolio_eff = min(max(0, portfolio), allowed - split_eff)
+    if wanted:
+        granted = split_eff + portfolio_eff
+        if granted == 0:
+            obs.counter_add("speculation.denied")
+        else:
+            obs.counter_add("speculation.split_granted", split_eff)
+            obs.counter_add("speculation.portfolio_granted", portfolio_eff)
+            if granted < wanted:
+                obs.counter_add("speculation.clamped")
     return split_eff, portfolio_eff
 
 

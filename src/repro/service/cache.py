@@ -30,6 +30,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.csp import CSP
 from .buckets import Bucket
 
@@ -96,18 +97,27 @@ class PreparedNetworkCache:
         """Pin (and on miss, install) the network. ``build()`` does the actual
         slot install and returns the slot id. Returns (entry, was_hit)."""
         key = (bucket, fingerprint)
-        entry = self._entries.get(key)
-        if entry is not None:
-            self._entries.move_to_end(key)
-            entry.pins += 1
-            self.hits += 1
-            return entry, True
-        self.misses += 1
-        self._evict_down_to(self.byte_budget - nbytes)
-        slot = build()
-        entry = CacheEntry(bucket, fingerprint, slot, nbytes, pins=1)
-        self._entries[key] = entry
-        self.bytes_in_use += nbytes
+        with obs.span("cache.lookup", cat="cache") as _sp:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                entry.pins += 1
+                self.hits += 1
+                obs.counter_add("cache.hits")
+                if _sp is not None:
+                    _sp.args["hit"] = True
+                return entry, True
+            self.misses += 1
+            obs.counter_add("cache.misses")
+            if _sp is not None:
+                _sp.args["hit"] = False
+            self._evict_down_to(self.byte_budget - nbytes)
+            # the miss path's build() (slot install) nests under this span —
+            # a cache.lookup that cost milliseconds IS the re-preparation
+            slot = build()
+            entry = CacheEntry(bucket, fingerprint, slot, nbytes, pins=1)
+            self._entries[key] = entry
+            self.bytes_in_use += nbytes
         return entry, False
 
     def release(self, entry: CacheEntry) -> None:
@@ -130,6 +140,7 @@ class PreparedNetworkCache:
             del self._entries[key]
             self.bytes_in_use -= entry.nbytes
             self.evictions += 1
+            obs.counter_add("cache.evictions")
             self._on_evict(entry)
 
     def stats(self) -> Dict[str, int]:

@@ -11,6 +11,13 @@ dispatched, span) are exact O(1) counters, while the per-sample series
 (latencies, queue depths, per-round rows/seconds) live in sliding windows of
 the most recent ``window`` samples — percentiles and means are therefore
 *recent-window* figures, which is what an operator watches anyway.
+
+All reductions route through the shared `repro.obs.registry` helpers
+(`percentile` / `mean`), which guarantee empty-window → 0.0 (never NaN) in
+ONE place; ``window=1`` degenerates to last-sample metrics but stays finite.
+Every ``record_*`` call also publishes into the central obs registry
+(``service.*`` counters/histograms), so a process-wide `obs.snapshot()`
+carries the same figures without holding a service reference.
 """
 
 from __future__ import annotations
@@ -18,15 +25,16 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, Dict, Optional
 
-import numpy as np
-
-
-def _mean(samples) -> float:
-    return float(np.mean(np.fromiter(samples, dtype=float))) if samples else 0.0
+from repro import obs
+from repro.obs.registry import mean as _mean
+from repro.obs.registry import percentile as _percentile
 
 
 class ServiceMetrics:
-    """Counters + sliding-window samples; ``snapshot`` reduces to one dict."""
+    """Counters + sliding-window samples; ``snapshot`` reduces to one dict.
+
+    The snapshot schema is stable and NaN-free: on a freshly constructed
+    instance (or any empty window) every value is an exact zero."""
 
     def __init__(self, window: int = 100_000) -> None:
         if window < 1:
@@ -61,19 +69,25 @@ class ServiceMetrics:
         self.n_submitted += 1
         if self.first_submit_t is None:
             self.first_submit_t = t
+        obs.counter_add("service.submitted")
 
     def record_finish(self, t: float, latency_s: float, status: str) -> None:
         if status == "done":
             self.n_completed += 1
             self.latencies_s.append(latency_s)
+            obs.counter_add("service.completed")
+            obs.observe("service.latency_ms", 1e3 * latency_s)
         elif status == "timed_out":
             self.n_timed_out += 1
+            obs.counter_add("service.timed_out")
         else:
             self.n_cancelled += 1
+            obs.counter_add("service.cancelled")
         self.last_finish_t = t
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depths.append(depth)
+        obs.gauge_set("service.queue_depth", depth)
 
     def record_round(
         self, rows: int, searches: int, seconds: float, launches: int = 1
@@ -85,6 +99,9 @@ class ServiceMetrics:
         self.round_searches.append(searches)
         self.round_seconds.append(seconds)
         self.round_launches.append(launches)
+        obs.counter_add("service.rounds")
+        obs.counter_add("service.rows_dispatched", rows)
+        obs.observe("service.round_ms", 1e3 * seconds)
 
     def record_request_rows(self, rows: int, members: int, cancelled: int) -> None:
         """File one retired request's lifetime row consumption and speculation
@@ -93,14 +110,14 @@ class ServiceMetrics:
         self.rows_per_request.append(rows)
         self.speculative_members_total += max(0, members - 1)
         self.speculative_cancels_total += cancelled
+        obs.observe("service.rows_per_request", rows)
 
     # --- reduction ----------------------------------------------------------
 
     def latency_ms(self, pct: float) -> float:
-        """Latency percentile over the recent window, in milliseconds."""
-        if not self.latencies_s:
-            return 0.0
-        return 1e3 * float(np.percentile(np.fromiter(self.latencies_s, float), pct))
+        """Latency percentile over the recent window, in milliseconds;
+        0.0 (never NaN) on an empty window."""
+        return 1e3 * _percentile(self.latencies_s, pct)
 
     @property
     def span_s(self) -> float:
@@ -136,10 +153,7 @@ class ServiceMetrics:
             "mean_queue_depth": round(_mean(self.queue_depths), 3),
             "max_queue_depth": int(max(self.queue_depths, default=0)),
             "median_rows_per_request": round(
-                float(np.median(np.fromiter(self.rows_per_request, float)))
-                if self.rows_per_request
-                else 0.0,
-                3,
+                _percentile(self.rows_per_request, 50), 3
             ),
             "speculative_members": self.speculative_members_total,
             "speculative_cancel_rate": round(

@@ -34,6 +34,7 @@ from collections import deque
 from enum import Enum
 from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
+from repro import obs
 from repro.core.csp import CSP
 from repro.core.engine import (
     Engine,
@@ -67,6 +68,7 @@ class SolveRequest:
         "deadline", "max_assignments", "status", "solution", "stats",
         "split_budget", "portfolio",
         "submitted_at", "admitted_at", "finished_at", "_service",
+        "_trace_t0",
     )
 
     def __init__(self, req_id: int, csp: CSP, bucket: Bucket, fingerprint: str,
@@ -92,6 +94,9 @@ class SolveRequest:
         self.admitted_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self._service = service
+        # tracer-clock submit stamp for the request-lifetime span; the service
+        # clock may be a FastForwardClock, so the tracer keeps its own timebase
+        self._trace_t0 = obs.now()
 
     def done(self) -> bool:
         return self.status in _TERMINAL
@@ -245,25 +250,26 @@ class SolverService:
         run ONE lockstep round per bucket with pending work. Returns the
         number of requests that reached a terminal state."""
         now = self._clock()
-        retired = self._expire(now)
-        self._admit()
-        for rt in list(self._buckets.values()):
-            if not rt.driver.has_work:
-                continue
-            finished = rt.driver.round()
-            # rounds are pipelined: record the round the driver RESOLVED this
-            # step (if any) — its row count and dispatch-to-metadata seconds —
-            # not the one it just launched asynchronously
-            info = rt.driver.last_round
-            if info is not None:
-                self.metrics.record_round(
-                    info.rows, info.searches, info.seconds, info.launches
-                )
-            for req_id, (sol, _stats) in finished.items():
-                req, _entry = rt.active[req_id]
-                self._retire(req, sol, RequestStatus.DONE)
-                retired += 1
-        self.metrics.record_queue_depth(len(self._queue))
+        with obs.span("service.step", cat="service"):
+            retired = self._expire(now)
+            self._admit()
+            for rt in list(self._buckets.values()):
+                if not rt.driver.has_work:
+                    continue
+                finished = rt.driver.round()
+                # rounds are pipelined: record the round the driver RESOLVED
+                # this step (if any) — its row count and dispatch-to-metadata
+                # seconds — not the one it just launched asynchronously
+                info = rt.driver.last_round
+                if info is not None:
+                    self.metrics.record_round(
+                        info.rows, info.searches, info.seconds, info.launches
+                    )
+                for req_id, (sol, _stats) in finished.items():
+                    req, _entry = rt.active[req_id]
+                    self._retire(req, sol, RequestStatus.DONE)
+                    retired += 1
+            self.metrics.record_queue_depth(len(self._queue))
         return retired
 
     def run_until_idle(self, max_steps: int = 1_000_000) -> None:
@@ -312,57 +318,62 @@ class SolverService:
             if self._max_active is not None and self.n_active >= self._max_active:
                 return
             req = self._queue.popleft()
-            rt = self._runtime(req.bucket)
-            padded = pad_csp(req.csp, req.bucket)
+            with obs.span("service.admit", cat="service", req=req.id,
+                          bucket=str(req.bucket)):
+                self._admit_one(req)
 
-            def install() -> int:
-                slot = rt.take_slot()
-                rt.pool.install(slot, padded)
-                return slot
+    def _admit_one(self, req: SolveRequest) -> None:
+        rt = self._runtime(req.bucket)
+        padded = pad_csp(req.csp, req.bucket)
 
-            # The cache budget counts the ENGINE's resident bytes for this
-            # bucket shape — packed u32 words on pallas_packed (≈8× fewer
-            # bytes than the logical bool network), padded u8 on pallas_dense,
-            # the logical network elsewhere — so the same budget legally holds
-            # proportionally more packed networks.
-            entry, _hit = self.cache.acquire(
-                req.bucket,
-                req.fingerprint,
-                self.engine.network_nbytes(req.bucket.n_p, req.bucket.d_p),
-                install,
-            )
-            # Size this request's speculation against live load: the spare-row
-            # pool is what the store ACTUALLY has free, clamped by the engine's
-            # advertised appetite, shared fairly with everyone still queued.
-            # Under pressure (deep queue / no slack) this degrades to plain
-            # admission — admit_group with (0, 0) is byte-identical to admit.
-            want_split = req.split_budget if req.split_budget is not None else self._split_budget
-            want_port = req.portfolio if req.portfolio is not None else self._portfolio
-            split_eff, port_eff = speculative_budget(
-                want_split,
-                want_port,
-                queue_depth=len(self._queue),
-                spare_rows=min(
-                    rt.store.spare_rows(), self.engine.speculative_rows_hint
-                ),
-                queue_limit=self._speculation_queue_limit,
-            )
-            req.stats = rt.driver.admit_group(
-                req.id,
-                padded,
-                idx=entry.slot,
-                split_budget=split_eff,
-                portfolio=port_eff,
-                portfolio_seed=self._portfolio_seed + req.id,
-                supports_batch=self.engine.supports_batch,
-                batched_children=self._batched_children,
-                n_active=req.n_vars,
-                max_assignments=req.max_assignments,
-                collect_stats=self._collect_stats,
-            )
-            rt.active[req.id] = (req, entry)
-            req.status = RequestStatus.RUNNING
-            req.admitted_at = self._clock()
+        def install() -> int:
+            slot = rt.take_slot()
+            rt.pool.install(slot, padded)
+            return slot
+
+        # The cache budget counts the ENGINE's resident bytes for this
+        # bucket shape — packed u32 words on pallas_packed (≈8× fewer
+        # bytes than the logical bool network), padded u8 on pallas_dense,
+        # the logical network elsewhere — so the same budget legally holds
+        # proportionally more packed networks.
+        entry, _hit = self.cache.acquire(
+            req.bucket,
+            req.fingerprint,
+            self.engine.network_nbytes(req.bucket.n_p, req.bucket.d_p),
+            install,
+        )
+        # Size this request's speculation against live load: the spare-row
+        # pool is what the store ACTUALLY has free, clamped by the engine's
+        # advertised appetite, shared fairly with everyone still queued.
+        # Under pressure (deep queue / no slack) this degrades to plain
+        # admission — admit_group with (0, 0) is byte-identical to admit.
+        want_split = req.split_budget if req.split_budget is not None else self._split_budget
+        want_port = req.portfolio if req.portfolio is not None else self._portfolio
+        split_eff, port_eff = speculative_budget(
+            want_split,
+            want_port,
+            queue_depth=len(self._queue),
+            spare_rows=min(
+                rt.store.spare_rows(), self.engine.speculative_rows_hint
+            ),
+            queue_limit=self._speculation_queue_limit,
+        )
+        req.stats = rt.driver.admit_group(
+            req.id,
+            padded,
+            idx=entry.slot,
+            split_budget=split_eff,
+            portfolio=port_eff,
+            portfolio_seed=self._portfolio_seed + req.id,
+            supports_batch=self.engine.supports_batch,
+            batched_children=self._batched_children,
+            n_active=req.n_vars,
+            max_assignments=req.max_assignments,
+            collect_stats=self._collect_stats,
+        )
+        rt.active[req.id] = (req, entry)
+        req.status = RequestStatus.RUNNING
+        req.admitted_at = self._clock()
 
     def _expire(self, now: float) -> int:
         """Retire queued/running requests whose deadline has passed."""
@@ -394,6 +405,15 @@ class SolverService:
         self.metrics.record_finish(
             req.finished_at, req.finished_at - req.submitted_at, status.value
         )
+        # request-lifetime span on its own Perfetto track, in the TRACER's
+        # timebase (the service clock may fast-forward); only when the stamp
+        # was taken with tracing already on, so the pair shares one origin
+        if obs.enabled() and req._trace_t0 > 0.0:
+            obs.record_complete(
+                "service.request", req._trace_t0, obs.now(),
+                cat="service", track="requests",
+                id=req.id, status=status.value, bucket=str(req.bucket),
+            )
         if req.stats is not None:  # was admitted: file lifetime row consumption
             self.metrics.record_request_rows(
                 req.stats.rows, req.stats.members, req.stats.cancelled_members
