@@ -17,17 +17,11 @@ and the recorded ``cache_hit_rate`` is meaningful.
 
 from __future__ import annotations
 
-import time
 from pathlib import Path
 
 from repro import obs
-from repro.service import (
-    FastForwardClock,
-    SolverService,
-    dedup_trace,
-    poisson_trace,
-    replay,
-)
+from repro.service import replay_rate_cell
+
 from . import tracker
 from .tracker import OUT_PATH
 
@@ -60,46 +54,17 @@ FULL_TRACES = TRACES + [
 def bench_trace(label: str, families, rate: float, duration: float,
                 engine: str = "einsum", seed: int = 0,
                 kind: str = "poisson", speculation: dict | None = None) -> dict:
-    if kind == "dedup":
-        events = dedup_trace(
-            families, rate=rate, duration=duration, seed=seed, pool_size=3
-        )
-    else:
-        events = poisson_trace(families, rate=rate, duration=duration, seed=seed)
-    clock = FastForwardClock()
-    svc = SolverService(engine=engine, clock=clock, **(speculation or {}))
-    t0 = time.perf_counter()
-    requests = replay(svc, events, clock)
-    wall_s = time.perf_counter() - t0
-    snap = svc.snapshot()
-    cache = snap["cache"]
-    lookups = cache.get("hits", 0) + cache.get("misses", 0)
-    return {
-        "trace": label,
-        "engine": engine,
-        "kind": kind,
-        "families": list(families),
-        "rate": rate,
-        "duration": duration,
-        "requests": len(requests),
-        "completed": snap["completed"],
-        "n_solved": sum(r.solution is not None for r in requests),
-        "wall_s": round(wall_s, 3),
-        "throughput_rps": snap["throughput_rps"],
-        "p50_ms": snap["p50_ms"],
-        "p95_ms": snap["p95_ms"],
-        "p99_ms": snap["p99_ms"],
-        "mean_rows_per_dispatch": snap["mean_rows_per_dispatch"],
-        "rounds": snap["rounds"],
-        "launches": snap["launches"],
-        "mean_launches_per_round": snap["mean_launches_per_round"],
-        "cache": cache,
-        "cache_hit_rate": round(cache.get("hits", 0) / lookups, 4) if lookups else 0.0,
-        "speculation": dict(speculation) if speculation else None,
-        "median_rows_per_request": snap["median_rows_per_request"],
-        "speculative_members": snap["speculative_members"],
-        "speculative_cancel_rate": snap["speculative_cancel_rate"],
-    }
+    """One labelled trace replay: `repro.service.replay_rate_cell` (the same
+    driver the sweep harness's service mode uses — one measurement path, two
+    consumers) plus the tracker-facing ``trace`` / ``speculation`` fields."""
+    row = replay_rate_cell(
+        engine=engine, families=families, rate=rate, duration=duration,
+        seed=seed, kind=kind, pool_size=3,
+        service_kwargs=speculation,
+    )
+    row["trace"] = label
+    row["speculation"] = dict(speculation) if speculation else None
+    return row
 
 
 def dump_obs_artifacts(out_dir: Path) -> list:

@@ -3,14 +3,17 @@
 Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
 --full for the paper's complete grid (n up to 1000).
 
-  table1   paper Table 1 — #Revision (AC3) vs #Recurrence (RTAC) per assignment
-  fig3     paper Fig. 3 — per-assignment enforcement time (+ batched variant)
   engines  per-engine enforce latency on 3 problem families × 3 sizes ->
            BENCH_engines.json (the cross-PR perf trajectory)
   many     instances/second of solve_many vs sequential mac_solve ->
            BENCH_engines.json "many" section
   service  SolverService trace replay: sustained throughput + tail latency ->
            BENCH_engines.json "service" section
+  sweeps   the committed `repro.sweeps` studies (resume-aware: completed
+           cells in results/ are never re-run) -> ungated "sweeps" section
+           + a per-sweep history row. The paper's Table 1 / Fig. 3
+           protocols live here now, as the ``recurrence_density``
+           assignments-mode sweep (formerly the table1/fig3 targets).
   roofline deliverable (g) — three-term roofline per dry-run artifact (reads
            artifacts/dryrun; run `python -m repro.launch.dryrun --all` first)
 
@@ -22,18 +25,6 @@ from __future__ import annotations
 
 import argparse
 import sys
-
-
-def _run_table1(quick: bool) -> None:
-    from . import bench_table1
-
-    bench_table1.main(quick=quick)
-
-
-def _run_fig3(quick: bool) -> None:
-    from . import bench_fig3
-
-    bench_fig3.main(quick=quick)
 
 
 def _run_engines(quick: bool) -> None:
@@ -54,6 +45,33 @@ def _run_service(quick: bool) -> None:
     bench_service.main(quick=quick)
 
 
+def _run_sweeps(quick: bool) -> None:
+    from repro.sweeps import available_specs, load_cells, load_spec, run_spec
+
+    from . import tracker
+
+    rows = []
+    for name in available_specs():
+        if name == "smoke":  # CI fixture, not a study
+            continue
+        spec = load_spec(name)
+        d = run_spec(spec)  # resume-aware; a complete study is a no-op
+        records = load_cells(d / "cells.jsonl")
+        secs = sorted(r["cell_seconds"] for r in records)
+        row = {
+            "sweep": name,
+            "mode": spec.mode,
+            "n_cells": len(records),
+            "total_seconds": round(sum(secs), 3),
+            "median_cell_seconds": round(secs[len(secs) // 2], 3) if secs else 0.0,
+        }
+        rows.append(row)
+        print(f"sweeps,{name},{spec.mode},{row['n_cells']},"
+              f"{row['total_seconds']:.1f}s")
+    tracker.merge_section("sweeps", rows)
+    print(f"sweeps: wrote {tracker.OUT_PATH}")
+
+
 def _run_roofline(quick: bool) -> None:
     from . import roofline
 
@@ -65,11 +83,10 @@ def _run_roofline(quick: bool) -> None:
 
 #: registration order is execution order for a full run
 TARGETS = {
-    "table1": _run_table1,
-    "fig3": _run_fig3,
     "engines": _run_engines,
     "many": _run_many,
     "service": _run_service,
+    "sweeps": _run_sweeps,
     "roofline": _run_roofline,
 }
 

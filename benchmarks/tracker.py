@@ -102,6 +102,16 @@ def _summarize(key: str, value) -> Optional[dict]:
                 f"{r['engine']}/{r['family']}": r["host_bytes_per_round"]
                 for r in value
             }
+        if key == "sweeps":
+            # ungated: the sweep studies' wall cost per PR, so a study that
+            # quietly balloons shows up in the trajectory
+            return {
+                r["sweep"]: {
+                    "n_cells": r["n_cells"],
+                    "total_seconds": r["total_seconds"],
+                }
+                for r in value
+            }
     except (KeyError, TypeError, ValueError):
         return None
     return None

@@ -11,10 +11,7 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import numpy as np

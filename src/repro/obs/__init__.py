@@ -26,6 +26,7 @@ from .registry import (
     REGISTRY,
     SCHEMA,
     Registry,
+    RegistryScope,
     counter_add,
     gauge_set,
     mean,
@@ -49,7 +50,7 @@ from .tracing import (
 )
 
 __all__ = [
-    "REGISTRY", "SCHEMA", "Registry", "Span", "Tracer",
+    "REGISTRY", "SCHEMA", "Registry", "RegistryScope", "Span", "Tracer",
     "child_coverage", "chrome_trace", "counter_add", "disable", "dump_run",
     "enable", "enable_from_env", "enabled", "fence", "gauge_set",
     "get_tracer", "load_run", "mean", "now", "observe", "percentile",

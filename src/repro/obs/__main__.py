@@ -5,6 +5,12 @@
 (rounds / launches / recurrences per completed solve), and speculation
 outcomes. ``export`` writes ``trace.perfetto.json`` — open it at
 https://ui.perfetto.dev.
+
+Run dumps (``repro-obs/v1`` JSON: registry snapshot + tracer spans) come
+from any entry point that calls `repro.obs.dump_run` under ``REPRO_TRACE=1``
+— e.g. ``python -m repro.launch.serve --trace-out run.json`` or the
+bench-smoke service benchmark; sweep cells record per-cell registry deltas
+(`Registry.scope`) into their ``cells.jsonl`` instead.
 """
 
 from __future__ import annotations

@@ -22,7 +22,7 @@ guarantee made in one place instead of per call site.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, Iterable
+from typing import Deque, Dict, Iterable, List
 
 import numpy as np
 
@@ -119,6 +119,77 @@ class Registry:
         self._counters.clear()
         self._gauges.clear()
         self._hists.clear()
+
+    def scope(self) -> "RegistryScope":
+        """A delta view over this registry: ``with REGISTRY.scope() as sc:``
+        marks the current counter values and histogram positions, and
+        ``sc.delta()`` afterwards reduces ONLY what was published inside the
+        block. Publishing stays global and always-on — a scope never mutates
+        or pauses the registry, it just remembers where it stood — so scopes
+        nest freely and cost two dict copies each.
+
+        `repro.sweeps` wraps every sweep cell in one, so per-cell records
+        carry exactly that cell's rounds/launches/speculation figures instead
+        of the whole process history."""
+        return RegistryScope(self)
+
+
+class RegistryScope:
+    """Per-block registry delta (see `Registry.scope`).
+
+    Caveat: histogram windows are bounded deques, so a scope that outlives
+    ``registry.window`` samples of one histogram under-reports that
+    histogram's early samples (never its late ones). Sweep cells publish a
+    few dozen samples each — far inside the default 65k window.
+    """
+
+    def __init__(self, registry: Registry):
+        self._r = registry
+        self._counters0: Dict[str, float] = {}
+        self._hist0: Dict[str, int] = {}
+
+    def __enter__(self) -> "RegistryScope":
+        self._counters0 = dict(self._r._counters)
+        self._hist0 = {k: len(v) for k, v in self._r._hists.items()}
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    def counters(self) -> Dict[str, float]:
+        """Counter increments since scope entry (zero-delta keys dropped)."""
+        out = {}
+        for k, v in self._r._counters.items():
+            d = v - self._counters0.get(k, 0)
+            if d:
+                out[k] = d
+        return out
+
+    def samples(self, name: str) -> List[float]:
+        """Histogram samples published under ``name`` since scope entry."""
+        h = self._r._hists.get(name)
+        if h is None:
+            return []
+        new = len(h) - self._hist0.get(name, 0)
+        if new <= 0:
+            return []
+        return list(h)[-new:]
+
+    def delta(self) -> Dict[str, object]:
+        """JSON-ready reduction of everything published inside the scope:
+        counter deltas plus `summarize` over each histogram's new samples
+        (histograms with no new samples are dropped). Schema ``repro-obs/v1``
+        like the full `Registry.snapshot`."""
+        hists = {}
+        for name in sorted(self._r._hists):
+            new = self.samples(name)
+            if new:
+                hists[name] = summarize(new)
+        return {
+            "schema": SCHEMA,
+            "counters": self.counters(),
+            "histograms": hists,
+        }
 
 
 #: the process-wide registry every subsystem publishes into

@@ -70,6 +70,27 @@ class ProblemFamily:
         params = self.params(**overrides)
         return [self.generator(seed=(seed, i), **params) for i in range(count)]
 
+    def validate_sweep(self, knobs: Mapping[str, Any]) -> Dict[str, List[Any]]:
+        """Validate a sweep-axis mapping (``knob -> scalar | list of values``)
+        against this family's knob set and return it normalized to lists.
+
+        This is how `repro.sweeps` exposes generator knobs as sweep axes: a
+        spec's ``[problem.knobs]`` table goes through here at load time, so an
+        unknown knob (or an axis on a family that does not have it) fails when
+        the spec is parsed, not hours into a sweep. Scalars normalize to
+        one-element lists; the ``difficulty_knob`` gets no special treatment —
+        any knob may be an axis."""
+        unknown = set(knobs) - set(self.defaults)
+        if unknown:
+            raise TypeError(
+                f"{self.name}: unknown sweep knob(s) {sorted(unknown)}; "
+                f"available: {sorted(self.defaults)}"
+            )
+        return {
+            k: list(v) if isinstance(v, (list, tuple)) else [v]
+            for k, v in knobs.items()
+        }
+
 
 _REGISTRY: Dict[str, ProblemFamily] = {}
 

@@ -32,6 +32,13 @@ from . import register_problem
     ),
 )
 def coloring_random(seed=0, n: int = 30, edge_prob: float = 0.2, k: int = 4) -> CSP:
+    """k-coloring of a seeded Erdős–Rényi G(``n``, ``edge_prob``) graph.
+
+    Knobs (all sweepable axes via ``[problem.knobs]`` in a sweep spec):
+    ``n`` vertices = CSP variables; ``edge_prob`` independent edge
+    probability — mean degree (n−1)·edge_prob; ``k`` colors = domain size,
+    the difficulty knob (the k-colorability threshold is sharp in the mean
+    degree, so lowering k or raising edge_prob crosses SAT → UNSAT)."""
     rng = np.random.default_rng(seed)
     iu = np.triu_indices(n, k=1)
     edge = rng.random(len(iu[0])) < edge_prob
@@ -65,6 +72,13 @@ def kneser_adjacency(m: int, j: int) -> np.ndarray:
     deterministic=True,
 )
 def coloring_kneser(seed=0, m: int = 5, j: int = 2, excess: int = 0) -> CSP:
+    """Coloring of the Kneser graph K(``m``, ``j``) with χ + ``excess`` colors.
+
+    Vertices are the C(m, j) j-subsets of an m-set (so the CSP has C(m, j)
+    variables), edges join disjoint subsets, and χ = m − 2j + 2 exactly
+    (Lovász 1978). ``excess`` is the calibrated difficulty knob: 0 gives a
+    tight-but-SAT instance, −1 a provably UNSAT one, larger values are easy.
+    The instance is deterministic — the seed is ignored."""
     del seed  # the graph is deterministic
     chromatic = m - 2 * j + 2
     k = chromatic + excess

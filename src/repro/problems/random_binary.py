@@ -60,7 +60,14 @@ def model_rb(
     hardness: float = 1.0,
     p: Optional[float] = None,
 ) -> CSP:
-    """Model RB instance at tightness ``p`` (default ``hardness · p_cr``)."""
+    """Model RB instance at tightness ``p`` (default ``hardness · p_cr``).
+
+    Knobs (all sweepable axes; the ``model_rb_phase`` study sweeps n ×
+    hardness): ``n`` variables; ``alpha`` sets domain size d = ⌈n^alpha⌉;
+    ``r`` sets constraint count m = ⌈r·n·ln n⌉ (distinct scopes, see module
+    docstring); ``hardness`` positions tightness relative to the proven
+    threshold (< 1 a.a.s. SAT, > 1 a.a.s. UNSAT); ``p`` overrides the
+    tightness outright, ignoring hardness."""
     rng = np.random.default_rng(seed)
     d, m, p_cr = model_rb_params(n, alpha, r)
     if p is None:
@@ -105,4 +112,12 @@ def random_binary(
     density: float = 0.25,
     tightness: float = 0.3,
 ) -> CSP:
+    """Classic model-A random binary CSP (the paper's §5.2 grid cells).
+
+    Knobs (all sweepable axes; the ``recurrence_density`` study sweeps n ×
+    density): ``n`` variables with uniform domain size ``d``; ``density`` is
+    the fraction of the n(n−1)/2 variable pairs that get a constraint;
+    ``tightness`` the independent probability a value pair is disallowed.
+    Unlike Model RB there is no proven threshold — density × tightness
+    together set the difficulty."""
     return random_csp(n, d, density=density, tightness=tightness, seed=seed)

@@ -24,6 +24,7 @@ from .trace import (
     dedup_trace,
     poisson_trace,
     replay,
+    replay_rate_cell,
 )
 
 __all__ = [
@@ -43,4 +44,5 @@ __all__ = [
     "dedup_trace",
     "poisson_trace",
     "replay",
+    "replay_rate_cell",
 ]

@@ -201,12 +201,24 @@ class SolverService:
         portfolio: Optional[int] = None,
     ) -> SolveRequest:
         """Queue one CSP; returns immediately with a `SolveRequest` future.
-        ``deadline_s`` is relative to submission; an in-flight request whose
-        deadline passes is cancelled at the next round boundary.
-        ``split_budget`` / ``portfolio`` override the service's speculation
-        defaults for this request (ceilings — admission still clamps them
-        against queue depth and spare frontier rows; the verdict is unchanged
-        either way, speculation only spends slack rows to finish sooner)."""
+
+        Per-request knobs (exposed as ``[service]`` keys in `repro.sweeps`
+        service-mode specs, and as ``submit_kwargs`` of
+        `repro.service.replay_rate_cell`):
+
+        - ``deadline_s``: relative to submission; an in-flight request whose
+          deadline passes is cancelled at the next round boundary. Bounds
+          *latency* (queue wait included).
+        - ``max_assignments``: search-budget cap — the request completes
+          unsolved once its MAC search has tried this many assignments.
+          Bounds *compute* per request without touching queueing, which is
+          why capacity studies set it: p95 then measures load, not the solve
+          time of one pathologically hard instance.
+        - ``split_budget`` / ``portfolio``: override the service's
+          speculation defaults for this request (ceilings — admission still
+          clamps them against queue depth and spare frontier rows; the
+          verdict is unchanged either way, speculation only spends slack
+          rows to finish sooner)."""
         now = self._clock()
         bucket = bucket_for(*csp.dom.shape, n_floor=self._n_floor, d_floor=self._d_floor)
         req = SolveRequest(

@@ -146,6 +146,91 @@ class FastForwardClock:
             self._offset += t - now
 
 
+def replay_rate_cell(
+    engine: str,
+    families: Sequence[str],
+    rate: float,
+    duration: float,
+    seed: int = 0,
+    kind: str = "poisson",
+    pool_size: int = 3,
+    warmup: bool = False,
+    service_kwargs: Optional[dict] = None,
+    submit_kwargs: Optional[dict] = None,
+    variants: Optional[Dict[str, List[dict]]] = None,
+) -> dict:
+    """ONE capacity-ramp cell: a fresh `SolverService` fed a seeded arrival
+    trace at ``rate`` req/s for ``duration`` trace-seconds, replayed to
+    completion on a `FastForwardClock`. Returns a flat JSON-ready record —
+    offered vs achieved rate, p50/p95/p99 latency, dispatch occupancy, cache
+    hit-rate, speculation occupancy — for the caller to judge against an SLO.
+
+    This is the driver hook behind capacity studies: `repro.sweeps`'s
+    ``service`` mode calls it once per grid cell (sweeping ``rate`` for the
+    offered-rate ramp, ``pool_size`` with ``kind="dedup"`` for the cache
+    hit-rate ramp), and `benchmarks.bench_service` records the same rows into
+    BENCH_engines.json. ``kind`` selects `poisson_trace` (every instance
+    unique — the cold-cache worst case) or `dedup_trace` (instances recur from
+    a ``pool_size`` pool per variant, so the prepared-network LRU serves real
+    hits). The trace is a pure function of (families, rate, duration, seed),
+    never of the engine or the service knobs.
+
+    ``warmup=True`` first replays the same trace through a THROWAWAY service
+    and discards it: jit-compiled bucket kernels are process-global, so the
+    measured replay starts compile-warm and its latencies are queueing +
+    solving, not XLA compilation. Capacity studies want this on (a cold p95
+    is dominated by per-bucket compiles at low rates); single-shot
+    benchmarking of cold-start behavior leaves it off."""
+    if kind == "dedup":
+        events = dedup_trace(families, rate=rate, duration=duration,
+                             seed=seed, pool_size=pool_size, variants=variants)
+    elif kind == "poisson":
+        events = poisson_trace(families, rate=rate, duration=duration,
+                               seed=seed, variants=variants)
+    else:
+        raise ValueError(f"unknown trace kind {kind!r} (poisson | dedup)")
+    if warmup:
+        wclock = FastForwardClock()
+        wsvc = SolverService(engine=engine, clock=wclock,
+                             **(service_kwargs or {}))
+        replay(wsvc, events, wclock, **(submit_kwargs or {}))
+    clock = FastForwardClock()
+    svc = SolverService(engine=engine, clock=clock, **(service_kwargs or {}))
+    t0 = time.perf_counter()
+    requests = replay(svc, events, clock, **(submit_kwargs or {}))
+    wall_s = time.perf_counter() - t0
+    snap = svc.snapshot()
+    cache = snap["cache"]
+    lookups = cache.get("hits", 0) + cache.get("misses", 0)
+    return {
+        "engine": engine,
+        "kind": kind,
+        "families": list(families),
+        "rate": rate,
+        "duration": duration,
+        "pool_size": pool_size if kind == "dedup" else None,
+        "requests": len(requests),
+        "completed": snap["completed"],
+        "n_solved": sum(r.solution is not None for r in requests),
+        "wall_s": round(wall_s, 3),
+        "throughput_rps": snap["throughput_rps"],
+        "p50_ms": snap["p50_ms"],
+        "p95_ms": snap["p95_ms"],
+        "p99_ms": snap["p99_ms"],
+        "mean_rows_per_dispatch": snap["mean_rows_per_dispatch"],
+        "rounds": snap["rounds"],
+        "launches": snap["launches"],
+        "mean_launches_per_round": snap["mean_launches_per_round"],
+        "cache": cache,
+        "cache_hit_rate": (
+            round(cache.get("hits", 0) / lookups, 4) if lookups else 0.0
+        ),
+        "median_rows_per_request": snap["median_rows_per_request"],
+        "speculative_members": snap["speculative_members"],
+        "speculative_cancel_rate": snap["speculative_cancel_rate"],
+    }
+
+
 def replay(
     service: SolverService,
     events: Sequence[TraceEvent],

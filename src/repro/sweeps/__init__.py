@@ -1,0 +1,30 @@
+"""`repro.sweeps` — declarative sweep harness + paper-claims report.
+
+The study pipeline (DESIGN.md §11) in three layers, one module each:
+
+- **spec** (`SweepSpec`, `load_spec`): TOML study definitions under
+  ``specs/`` ↔ frozen dataclasses ↔ deterministic cell grids — any
+  list-valued knob is a sweep axis.
+- **runner** (`run_spec`): executes not-yet-recorded cells via
+  `repro.core.solve_many`, the Table-1/Fig-3 assignments protocol, or
+  `repro.service.replay_rate_cell`, appending per-cell records (metrics +
+  obs-registry delta) to resumable ``cells.jsonl`` artifacts in ``results/``.
+- **report** (`build_report`, `check_report`): pivots committed artifacts
+  into dependency-free SVG figures (`figures.line_chart`) and regenerates
+  the repo-root ``RESULTS.md`` — one section per paper claim with a
+  PASS/DEVIATES verdict. `check_report` is CI's byte-diff drift gate.
+
+CLI: ``python -m repro.sweeps {list | run | report}``.
+"""
+
+from .figures import Series, line_chart
+from .report import CLAIMS, build_report, check_report, collect, pivot
+from .runner import DEFAULT_OUT_ROOT, load_cells, read_header, run_spec, sweep_dir
+from .spec import SCHEMA, Cell, SweepSpec, available_specs, dumps_toml, load_spec, loads_toml
+
+__all__ = [
+    "CLAIMS", "Cell", "DEFAULT_OUT_ROOT", "SCHEMA", "Series", "SweepSpec",
+    "available_specs", "build_report", "check_report", "collect",
+    "dumps_toml", "line_chart", "load_cells", "load_spec", "loads_toml",
+    "pivot", "read_header", "run_spec", "sweep_dir",
+]

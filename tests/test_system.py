@@ -4,7 +4,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (
-    CSPBenchSpec,
     check_solution,
     enforce,
     enforce_ac3,
@@ -25,15 +24,32 @@ def test_paper_pipeline_end_to_end():
 
 def test_recurrences_much_smaller_than_revisions():
     """The paper's headline claim (Table 1): #Recurrence << #Revision, and
-    #Recurrence stays ~flat as density grows."""
-    from benchmarks.bench_table1 import run_cell
+    #Recurrence stays ~flat as density grows. Runs through the sweep
+    harness's assignments mode — the committed ``recurrence_density`` study
+    uses this exact cell executor."""
+    from repro.sweeps import SweepSpec
+    from repro.sweeps.runner import _run_assignments_cell
 
-    recs, revs = [], []
-    for dens in (0.25, 0.75):
-        row = run_cell(CSPBenchSpec(n_vars=100, density=dens), n_assignments=5)
-        assert not row.get("inconsistent_root")
-        recs.append(row["einsum_recurrences"])
-        revs.append(row["ac3_revisions"])
+    spec = SweepSpec(
+        name="t_table1", mode="assignments", replicates=1,
+        problem={
+            "family": "random_binary",
+            "knobs": {"n": 100, "d": 20, "tightness": 0.3,
+                      "density": [0.25, 0.75]},
+        },
+        solver={"engine": ["einsum", "ac3"], "n_assignments": 5,
+                "batch_timing": False},
+    )
+    counts = {}  # (engine, density) -> mean count
+    for cell in spec.cells():
+        # engine is excluded from the workload seed, so both engines
+        # enforce the same sampled sites of the same instance
+        m = _run_assignments_cell(spec, cell, spec.workload_seed(cell))
+        assert m["roots_consistent"] == m["n_instances"], m
+        flat = cell.flat()
+        counts[(flat["engine"], flat["density"])] = m["mean_count"]
+    recs = [counts[("einsum", d)] for d in (0.25, 0.75)]
+    revs = [counts[("ac3", d)] for d in (0.25, 0.75)]
     assert all(k <= 6 for k in recs), recs
     assert all(r > 10 * k for r, k in zip(revs, recs)), (revs, recs)
     # revisions grow with density; recurrences roughly flat (paper Table 1)
