@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from pathlib import Path
 
-from repro import obs
+from repro import faults, obs
 from repro.service import replay_rate_cell
 
 from . import tracker
@@ -49,6 +49,57 @@ FULL_TRACES = TRACES + [
     ("einsum", "poisson_mixed_r8_d20", "poisson",
      ["model_rb", "coloring_random"], 8.0, 20.0, None),
 ]
+
+#: (engine, recipe, service knobs, trace overrides) — the chaos drill behind
+#: the gated "faults" section (DESIGN.md §12). Backoffs are shortened so the
+#: replay stays seconds-long; the FastForwardClock jumps the gates anyway.
+#: NOTE a round-level fault requeues (and charges a retry to) EVERY request
+#: in flight on that driver, so failure rates amplify with batch depth — the
+#: ceilings in check_regression are set against that, not the raw site rate.
+_CHAOS_KW = {"backoff_base_s": 0.01, "backoff_cap_s": 0.05}
+CHAOS = [
+    # every site at 5%: recovery is retry-shaped (einsum's ladder has one
+    # rung), the gate is unresolved == 0 + a bounded error rate. The retry
+    # cap is generous because a round-level fault charges every co-batched
+    # request and retries breed more rounds (more fault draws) — round
+    # membership also shifts with host timing, so failures must stay rare
+    # across runner speeds, not just on one box
+    ("einsum", "all:0.05", dict(_CHAOS_KW, retry_cap=25), {}),
+    # retry_cap=0 turns every kernel fault into a demotion; max_fires=2 bounds
+    # the storm so the fallback ladder pallas_packed -> stepped -> einsum
+    # carries the demoted cohort to verdicts (recovered > 0, demotions > 0)
+    ("pallas_packed", "kernel.launch:0.5:oom:2", dict(_CHAOS_KW, retry_cap=0),
+     {"families": ["model_rb"], "rate": 6.0, "duration": 2.0}),
+    # overload drill, no faults: a burst against a short queue bound must
+    # shed typed Overloaded verdicts instead of blowing the tail latency
+    ("einsum", None, dict(_CHAOS_KW, shed_queue_depth=10),
+     {"rate": 60.0, "duration": 1.0}),
+]
+
+
+def bench_chaos(engine: str, recipe, service_kwargs: dict,
+                overrides: dict = None, seed: int = 0) -> dict:
+    """One seeded chaos replay: a poisson trace under an injected fault plan
+    (``recipe=None`` replays fault-free — the pure-overload drill). Records
+    the outcome mix (recovered / shed / failed) and the recovery-machinery
+    engagement the tracker history and `check_regression` gate on —
+    ``unresolved`` must be 0 (every future reaches a terminal state) and the
+    error/shed rates must stay under absolute ceilings."""
+    cell = dict(families=["model_rb", "coloring_random"], rate=12.0, duration=4.0)
+    cell.update(overrides or {})
+    with faults.injected(recipe or "all:0.0", seed=seed) as plan:
+        row = replay_rate_cell(
+            engine=engine, seed=seed, service_kwargs=service_kwargs, **cell,
+        )
+    n = max(1, row["requests"])
+    row.update(
+        recipe=recipe or "none",
+        fires=plan.total_fires,
+        fires_by_site={s: f for s, f in sorted(plan.fires.items()) if f},
+        error_rate=round(row["failed"] / n, 4),
+        shed_rate=round(row["shed"] / n, 4),
+    )
+    return row
 
 
 def bench_trace(label: str, families, rate: float, duration: float,
@@ -104,6 +155,16 @@ def main(quick: bool = True, out_path: Path = OUT_PATH) -> list:
             f"hit_rate={r['cache_hit_rate']:.3f}"
         )
     tracker.merge_section("service", rows, out_path)
+    chaos_rows = [bench_chaos(engine, recipe, kw, ov)
+                  for engine, recipe, kw, ov in CHAOS]
+    for r in chaos_rows:
+        print(
+            f"faults,{r['engine']},{r['recipe']},{r['requests']},"
+            f"fires={r['fires']},recovered={r['recovered']},shed={r['shed']},"
+            f"failed={r['failed']},retries={r['retries']},"
+            f"demotions={r['demotions']},unresolved={r['unresolved']}"
+        )
+    tracker.merge_section("faults", chaos_rows, out_path)
     # process-wide registry figures ride along as an ungated "obs" section —
     # per-solve rates and speculation outcomes across every trace above
     tracker.merge_section("obs", obs.snapshot(), out_path)

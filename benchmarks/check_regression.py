@@ -27,7 +27,10 @@ DESIGN.md §8) gates ``host_bytes_per_round`` AND ``metadata_fraction``: a
 ``> tolerance``× growth in per-round host↔device traffic — absolute bytes, or
 the fraction of the counterfactual full-domain protocol — e.g. a domain
 tensor sneaking back onto the boundary — fails like any latency regression.
-Exit code 0 = ok, 1 = regression/mismatch.
+The "faults" section (bench_service chaos drill, DESIGN.md §12) is gated on
+ABSOLUTE ceilings instead of ratios: ``unresolved == 0`` always, plus hard
+error-rate/shed-rate bounds — liveness under chaos is a correctness contract,
+not a trend. Exit code 0 = ok, 1 = regression/mismatch.
 """
 
 from __future__ import annotations
@@ -86,6 +89,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list:
     failures.extend(compare_many(baseline, fresh, tolerance))
     failures.extend(compare_service(baseline, fresh, tolerance))
     failures.extend(compare_frontier(baseline, fresh, tolerance))
+    failures.extend(compare_faults(baseline, fresh))
     return failures
 
 
@@ -181,6 +185,54 @@ def compare_frontier(baseline: dict, fresh: dict, tolerance: float) -> list:
                 )
     for key in sorted(set(fresh_rows) - set(base_rows)):
         print(f"new  frontier:{key[0]:7s} {key[1]:34s} (no baseline — passes)")
+    return failures
+
+
+def index_faults(report: dict) -> dict:
+    return {(r["engine"], r["recipe"]): r for r in report.get("faults", [])}
+
+
+#: absolute ceilings for the chaos cells — correctness bounds, not trends,
+#: so no tolerance multiplier applies (DESIGN.md §12 acceptance)
+FAULTS_MAX_ERROR_RATE = 0.25
+FAULTS_MAX_SHED_RATE = 0.90
+
+
+def compare_faults(baseline: dict, fresh: dict) -> list:
+    """Gate the faults section (the chaos drill) on ABSOLUTE ceilings rather
+    than baseline ratios: ``unresolved`` must be exactly 0 (every future under
+    chaos reaches a terminal state — the liveness contract), the failure rate
+    must stay under `FAULTS_MAX_ERROR_RATE`, and the shed rate under
+    `FAULTS_MAX_SHED_RATE` (the overload drill sheds most of its burst by
+    design; shedding *everything* would mean admission is wedged). Missing
+    rows fail like the other sections."""
+    failures = []
+    base_rows, fresh_rows = index_faults(baseline), index_faults(fresh)
+    for key in sorted(base_rows):
+        engine, recipe = key
+        if key not in fresh_rows:
+            failures.append(f"faults {engine} {recipe}: row missing from fresh run")
+            continue
+        f = fresh_rows[key]
+        checks = [
+            ("unresolved", f.get("unresolved", -1), 0),
+            ("error_rate", f.get("error_rate", 1.0), FAULTS_MAX_ERROR_RATE),
+            ("shed_rate", f.get("shed_rate", 1.0), FAULTS_MAX_SHED_RATE),
+        ]
+        bad = [(m, v, ceil) for m, v, ceil in checks if v > ceil]
+        status = "FAIL" if bad else "ok"
+        print(
+            f"{status:4s} faults:{engine:8s} {recipe:28s} "
+            f"unresolved={f.get('unresolved')} error_rate={f.get('error_rate')} "
+            f"shed_rate={f.get('shed_rate')} recovered={f.get('recovered')} "
+            f"demotions={f.get('demotions')}"
+        )
+        for metric, v, ceil in bad:
+            failures.append(
+                f"faults {engine} {recipe}: {metric} {v} > ceiling {ceil}"
+            )
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"new  faults:{key[0]:8s} {key[1]:28s} (no baseline — passes)")
     return failures
 
 

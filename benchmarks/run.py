@@ -14,8 +14,6 @@ Prints ``name,...`` CSV rows. Quick mode keeps CPU runtime in minutes; pass
            + a per-sweep history row. The paper's Table 1 / Fig. 3
            protocols live here now, as the ``recurrence_density``
            assignments-mode sweep (formerly the table1/fig3 targets).
-  roofline deliverable (g) — three-term roofline per dry-run artifact (reads
-           artifacts/dryrun; run `python -m repro.launch.dryrun --all` first)
 
 ``--only <target>`` runs one target; an unknown target exits non-zero and
 prints the valid target list (no more silently running nothing on a typo).
@@ -72,22 +70,12 @@ def _run_sweeps(quick: bool) -> None:
     print(f"sweeps: wrote {tracker.OUT_PATH}")
 
 
-def _run_roofline(quick: bool) -> None:
-    from . import roofline
-
-    try:
-        roofline.main()
-    except Exception as e:  # unexpected failure; missing artifacts are
-        print(f"roofline,skipped,{e}", file=sys.stderr)  # handled inside
-
-
 #: registration order is execution order for a full run
 TARGETS = {
     "engines": _run_engines,
     "many": _run_many,
     "service": _run_service,
     "sweeps": _run_sweeps,
-    "roofline": _run_roofline,
 }
 
 

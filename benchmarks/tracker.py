@@ -32,7 +32,7 @@ OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engines.json"
 
 #: the sections check_regression gates; `--reset-sections` strips exactly
 #: these so a fresh CI run must rebuild every one of them from scratch
-GATED_SECTIONS = ("engines", "many", "service", "frontier")
+GATED_SECTIONS = ("engines", "many", "service", "frontier", "faults")
 
 #: history never grows without bound — older runs roll off
 HISTORY_MAX = 200
@@ -94,6 +94,23 @@ def _summarize(key: str, value) -> Optional[dict]:
                     "median_rows_per_request": r.get("median_rows_per_request", 0.0),
                     # fused-fixpoint health: >1 means rounds split launches
                     "mean_launches_per_round": r.get("mean_launches_per_round", 0.0),
+                    # robustness outcome mix under the (fault-free) replay —
+                    # any nonzero shed/failed here flags a capacity regression
+                    "shed": r.get("shed", 0),
+                    "failed": r.get("failed", 0),
+                }
+                for r in value
+            }
+        if key == "faults":
+            # the chaos drill: outcome mix + recovery machinery engagement
+            return {
+                f"{r['engine']}/{r['recipe']}": {
+                    "error_rate": r["error_rate"],
+                    "shed_rate": r["shed_rate"],
+                    "unresolved": r["unresolved"],
+                    "retries": r["retries"],
+                    "demotions": r["demotions"],
+                    "recovered": r["recovered"],
                 }
                 for r in value
             }

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 
 from .csp import CSP
 from .rtac import EnforceResult
@@ -273,6 +273,7 @@ class SlotPool:
                 f"install: csp shape {tuple(csp.dom.shape)} != pool bucket "
                 f"({self.n_vars}, {self.dom_size})"
             )
+        faults.inject("slot.install", slot=slot)
         # the service's one O(n²d²) admission step — worth its own span
         with obs.span("slot.install", cat="engine", slot=slot,
                       n=self.n_vars, d=self.dom_size):
@@ -746,6 +747,8 @@ class FrontierTable:
         r = len(specs)
         if r == 0:
             raise ValueError("dispatch needs at least one row")
+        # before _alloc/_check_net so a fired fault leaves the table unmutated
+        faults.inject("frontier.step", rows=r)
         if self._check_net is not None:
             self._check_net(
                 net_idx
@@ -789,6 +792,7 @@ class FrontierTable:
         # audit stays clean, and verdicts are bit-identical either way)
         with obs.span("kernel.launch", cat="kernel", rows=r, padded=r_p,
                       fused=self.fused_fixpoint):
+            faults.inject("kernel.launch", rows=r)
             with warnings.catch_warnings():
                 warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
                 self._buf, self._abuf, *meta = _frontier_step(

@@ -68,7 +68,7 @@ from typing import (
 
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 
 from .ac3 import assign_np
 from .csp import CSP
@@ -116,6 +116,11 @@ class SearchStats:
     #: members cancelled when the group resolved (first SAT wins / UNSAT
     #: needs the whole cover) — speculative work thrown away.
     cancelled_members: int = 0
+    #: non-None iff the round watchdog evicted this search mid-flight; the
+    #: string names the breached bound. A quarantined ``(None, stats)`` result
+    #: is a FAILURE verdict, never a proof of unsatisfiability — consumers
+    #: must check this BEFORE reading ``None`` as UNSAT.
+    quarantined: Optional[str] = None
 
     @property
     def mean_recurrences(self) -> float:
@@ -495,6 +500,7 @@ class HostFrontierStore:
         # host stores block inside the dispatch (np.asarray below), so this
         # span IS the enforcement wall-clock, fenced or not
         with obs.span("kernel.launch", cat="kernel", rows=r):
+            faults.inject("kernel.launch", rows=r)
             res = self._enforce_rows(doms, chs, np.asarray(net_idx, np.int32), roots)
             obs.fence(res.dom)
         dom_out = np.asarray(res.dom)[:r]
@@ -775,10 +781,23 @@ class LockstepDriver:
         store,
         n_vars: int,
         count_unit: str = "recurrences",
+        round_wall_s: Optional[float] = None,
+        round_recurrences: Optional[int] = None,
     ):
         self._store = store
         self._n = n_vars
         self._count_unit = count_unit
+        # round watchdog bounds (None = unbounded, the solve_many default):
+        # a resolved round breaching either evicts its deepest live search
+        # via `_quarantine_offender` instead of letting one pathological
+        # instance stall every search sharing the lockstep
+        if round_wall_s is not None and round_wall_s <= 0:
+            raise ValueError("round_wall_s must be positive (or None)")
+        if round_recurrences is not None and round_recurrences < 1:
+            raise ValueError("round_recurrences must be >= 1 (or None)")
+        self._round_wall_s = round_wall_s
+        self._round_recurrences = round_recurrences
+        self.watchdog_trips = 0
         self._gens: Dict[object, _MacGen] = {}
         self._pending: Dict[object, _Request] = {}
         self._idx: Dict[object, int] = {}
@@ -1170,8 +1189,39 @@ class LockstepDriver:
             layout.append((k, b))
         return specs, layout, net_idx
 
+    def _quarantine_offender(self, layout, res, reason: str, finished: Dict) -> None:
+        """Watchdog eviction: retire the live search whose rows did the
+        deepest work this round, reporting ``(None, stats)`` with
+        ``stats.quarantined`` set (rows freed mid-flight through the normal
+        `_retire_key` → ``store.release`` lifetime). Group members take their
+        whole speculative group down with them — the group shares one verdict."""
+        offender, depth = None, -1.0
+        off = 0
+        for k, b in layout:
+            rows_k = res.k[off:off + b]
+            off += b
+            if k not in self._gens:
+                continue
+            d = float(np.max(rows_k)) if rows_k.size else 0.0
+            if d > depth:
+                offender, depth = k, d
+        if offender is None:
+            return
+        self.watchdog_trips += 1
+        obs.counter_add("watchdog.trips")
+        g = self._group_of.get(offender)
+        if g is not None and not g.done:
+            self._resolve_group(g, None, False, finished)
+            g.stats.quarantined = reason
+        else:
+            stats = self._retire_key(offender)
+            self._group_of.pop(offender, None)
+            stats.quarantined = reason
+            finished[offender] = (None, stats)
+
     def _advance(self, layout, pend, t0) -> Dict:
         """Block on a round's metadata, file stats, advance every coroutine."""
+        faults.inject("round.resolve", rows=sum(b for _, b in layout))
         res = pend.resolve()
         dt = time.perf_counter() - t0
         r = sum(b for _, b in layout)
@@ -1191,8 +1241,26 @@ class LockstepDriver:
             else None
         )
 
-        off = 0
         finished: Dict[object, Tuple[Optional[List[int]], SearchStats]] = {}
+        breach = None
+        if self._round_wall_s is not None and dt > self._round_wall_s:
+            breach = f"round wall-clock {dt:.3f}s > {self._round_wall_s:g}s"
+        elif (
+            self._round_recurrences is not None
+            and res.k.size
+            and int(np.max(res.k)) > self._round_recurrences
+        ):
+            breach = (
+                f"round recurrence depth {int(np.max(res.k))} > "
+                f"{self._round_recurrences}"
+            )
+        if breach is not None:
+            # evict BEFORE advancing coroutines: the offender's results for
+            # this round are dropped and the `k not in self._gens` guard below
+            # skips its layout slice
+            self._quarantine_offender(layout, res, breach, finished)
+
+        off = 0
         # a speculative group's members share ONE stats object: per-REQUEST
         # round quantities (rounds ridden, the round's launch bill) must be
         # filed once per stats object, not once per member

@@ -27,7 +27,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import faults, obs
 from repro.core import rtac
 from repro.core.csp import CSP
 from repro.core.engine import pad_dom, pad_network, padded_shape
@@ -100,6 +100,7 @@ def prepare_dense(csp: CSP, block_rx: int = 8, block_ry: int = 8):
     """-> (network, dom_padded, (n_p, d_p)). network = (cons2 u8, mask u8).
 
     The network half is memoized per CSP; the domain is padded fresh (O(n·d))."""
+    faults.inject("kernel.launch", kernel="dense")
 
     def build():
         cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), D_MULT)
@@ -176,6 +177,7 @@ def _packed_revise_fn(
 
 def prepare_packed(csp: CSP, block_rx: int = 8, block_ry: int = 8):
     """-> (network, dom_padded, (n_p, d_p, w)); network memoized per CSP."""
+    faults.inject("kernel.launch", kernel="packed")
 
     def build():
         cons, mask, n_p, d_p = pad_network(csp, max(block_rx, block_ry), D_MULT)

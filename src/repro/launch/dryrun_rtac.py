@@ -31,7 +31,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.engines import ShardedEngine
-from repro.launch.dryrun import _cost_dict, _mem_dict
 from repro.launch.mesh import make_production_mesh
 from repro.parallel.hlo_stats import collective_stats, total_wire_bytes
 
@@ -40,6 +39,42 @@ ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 N_VARS = 4096
 DOM = 32
 BATCH = 512
+
+
+def _mem_dict(compiled) -> dict:
+    """Numeric fields of ``compiled.memory_analysis()`` (backend-dependent
+    attribute set, so reflect rather than enumerate)."""
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": str(e)}
+    if ma is None:
+        return {"error": "memory_analysis() returned None"}
+    for k in dir(ma):
+        if k.startswith("_"):
+            continue
+        try:
+            v = getattr(ma, k)
+        except Exception:
+            continue
+        if isinstance(v, (int, float)):
+            out[k] = v
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    """Numeric fields of ``compiled.cost_analysis()`` (list-wrapped on some
+    backends)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if ca is None:
+        return {"error": "cost_analysis() returned None"}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
 
 
 def run_variant(variant: str, mesh_kind: str) -> dict:

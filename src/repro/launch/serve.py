@@ -12,6 +12,11 @@ With ``--trace-out run.json`` (or ``REPRO_TRACE=1`` in the environment) the
 replay runs under the `repro.obs` tracer and drops the full run payload plus
 a ``run.perfetto.json`` timeline next to it — load the latter in
 ui.perfetto.dev, or ``python -m repro.obs summarize run.json``.
+
+With ``--faults RECIPE`` (or ``REPRO_FAULTS`` in the environment) the replay
+runs under seeded fault injection — the chaos drill CI's chaos-smoke leg
+exercises: every future must still resolve, demotions ride the fallback
+ladder, and the outcome line breaks down recovered / shed / failed.
 """
 
 from __future__ import annotations
@@ -19,7 +24,7 @@ from __future__ import annotations
 import argparse
 from pathlib import Path
 
-from repro import obs
+from repro import faults, obs
 from repro.service import (
     DEFAULT_VARIANTS,
     FastForwardClock,
@@ -46,14 +51,23 @@ def serve(
     quiet: bool = False,
     trace_out: str = None,
     trace_timing: str = "async",
+    faults_recipe: str = None,
+    faults_seed: int = 0,
+    service_kwargs: dict = None,
 ):
     """Run one trace replay; returns (service, requests). With ``trace_out``
     set, the replay is traced (enabling the obs tracer if the environment
-    didn't already) and the run payload + Perfetto timeline land on disk."""
+    didn't already) and the run payload + Perfetto timeline land on disk.
+    ``faults_recipe`` installs a seeded `repro.faults` plan for the replay
+    (on top of any ``REPRO_FAULTS`` already active); ``service_kwargs``
+    forwards extra `SolverService` knobs (retry caps, watchdog limits, shed
+    thresholds)."""
     if trace not in TRACES:
         raise ValueError(f"unknown trace {trace!r}; available: {list(TRACES)}")
     if trace_out and not obs.enabled():
         obs.enable(timing=trace_timing)
+    if faults_recipe:
+        faults.configure(faults_recipe, seed=faults_seed)
     events = poisson_trace(list(families), rate=rate, duration=duration, seed=seed)
     clock = FastForwardClock()
     svc = SolverService(
@@ -61,6 +75,7 @@ def serve(
         cache_bytes=cache_mb << 20,
         initial_slots=initial_slots,
         clock=clock,
+        **(service_kwargs or {}),
     )
     if not quiet:
         print(
@@ -80,6 +95,20 @@ def serve(
             + (f" ({n_to} timed out)" if n_to else "")
             + f" over {snap['span_s']:.2f}s of service time"
         )
+        plan = faults.active()
+        if plan is not None or snap["shed"] or snap["failed"]:
+            n_rec = sum(
+                r.status is RequestStatus.DONE
+                and (r.retries > 0 or r.engine_level > 0)
+                for r in requests
+            )
+            print(
+                f"[serve] robustness: {plan.total_fires if plan else 0} faults "
+                f"injected | {n_rec} recovered, {snap['shed']} shed, "
+                f"{snap['failed']} failed | {snap['retries']} retries, "
+                f"{snap['demotions']} demotions, "
+                f"{snap['breaker_trips']} breaker trips"
+            )
         print(
             f"[serve] throughput {snap['throughput_rps']:.2f} inst/s | "
             f"latency p50 {snap['p50_ms']:.1f} ms  p95 {snap['p95_ms']:.1f} ms  "
@@ -152,6 +181,12 @@ def main(argv=None):
         help="span timing mode: 'fenced' blocks on device results inside "
              "kernel.launch spans so durations are true device time",
     )
+    ap.add_argument(
+        "--faults", default=None, metavar="RECIPE",
+        help="seeded fault-injection recipe, e.g. 'all:0.05' or "
+             "'frontier.step:0.1:oom' (same syntax as REPRO_FAULTS)",
+    )
+    ap.add_argument("--faults-seed", type=int, default=0)
     args = ap.parse_args(argv)
     serve(
         families=[f.strip() for f in args.families.split(",") if f.strip()],
@@ -166,6 +201,8 @@ def main(argv=None):
         initial_slots=args.slots,
         trace_out=args.trace_out,
         trace_timing=args.trace_timing,
+        faults_recipe=args.faults,
+        faults_seed=args.faults_seed,
     )
 
 

@@ -8,6 +8,13 @@ publishes into ONE process-wide table under dotted names
 dict with the stable schema ``repro-obs/v1`` that the benchmarks, the
 tracker history, and the CLI all consume.
 
+The robustness fabric (DESIGN.md §12) publishes here too:
+``faults.injected`` / ``faults.injected.<site>`` (fired injections),
+``faults.round_recoveries`` (driver rebuilds after a faulted round),
+``service.shed`` / ``service.retries`` / ``service.failed``,
+``fallback.demotions`` / ``fallback.breaker_trips``, and
+``watchdog.trips`` (round watchdog evictions).
+
 Unlike the tracer the registry is ALWAYS on: publishing is a plain dict
 int-add (no clock reads, no allocation on the hot path beyond a deque
 append for histogram samples), cheap enough that the default path carries

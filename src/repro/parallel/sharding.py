@@ -155,22 +155,3 @@ def shard_act(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
         return x
     spec = spec_for(axes, x.shape, ctx.act_rules, ctx.mesh_shape, ctx.log)
     return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
-
-
-def param_pspecs(decls, ctx: ShardingCtx):
-    """PartitionSpec tree for a ParamDecl tree under ctx's param rules."""
-    from repro.models.param import is_decl
-
-    return jax.tree.map(
-        lambda d: spec_for(d.axes, d.shape, ctx.param_rules, ctx.mesh_shape, ctx.log),
-        decls,
-        is_leaf=is_decl,
-    )
-
-
-def param_shardings(decls, ctx: ShardingCtx):
-    return jax.tree.map(
-        lambda s: NamedSharding(ctx.mesh, s),
-        param_pspecs(decls, ctx),
-        is_leaf=lambda x: isinstance(x, P),
-    )

@@ -11,12 +11,16 @@ networks deduplicated through a byte-budgeted prepared-network cache, and all
 live searches in a bucket advance through ONE lockstep dispatch per round —
 new admissions join mid-flight, finished searches free their rows mid-flight.
 `repro.launch.serve` replays seeded Poisson arrival traces against it.
+
+The request path is hardened end-to-end (DESIGN.md §12): seeded fault
+injection (`repro.faults`), retry + engine-fallback ladders, per-round
+watchdogs with bucket circuit breakers, and typed `Overloaded` load shedding.
 """
 
 from .buckets import Bucket, bucket_for, pad_csp
 from .cache import CacheEntry, PreparedNetworkCache, network_fingerprint
 from .metrics import ServiceMetrics
-from .service import RequestStatus, SolveRequest, SolverService
+from .service import InvalidRequest, RequestStatus, SolveRequest, SolverService
 from .trace import (
     DEFAULT_VARIANTS,
     FastForwardClock,
@@ -35,6 +39,7 @@ __all__ = [
     "PreparedNetworkCache",
     "network_fingerprint",
     "ServiceMetrics",
+    "InvalidRequest",
     "RequestStatus",
     "SolveRequest",
     "SolverService",

@@ -30,9 +30,9 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 from repro.core.csp import CSP
-from .buckets import Bucket
+from .buckets import Bucket  # noqa: F401  (re-export; keys are opaque here)
 
 
 def network_fingerprint(csp: CSP) -> str:
@@ -50,9 +50,12 @@ def network_fingerprint(csp: CSP) -> str:
 
 @dataclasses.dataclass
 class CacheEntry:
-    """One resident network: where it lives and who is flying against it."""
+    """One resident network: where it lives and who is flying against it.
+    ``bucket`` is an opaque hashable runtime key — the service keys runtimes
+    by (Bucket, engine fallback level), so networks prepared on different
+    ladder levels never alias a slot."""
 
-    bucket: Bucket
+    bucket: object
     fingerprint: str
     slot: int
     nbytes: int
@@ -95,7 +98,11 @@ class PreparedNetworkCache:
         build: Callable[[], int],
     ) -> Tuple[CacheEntry, bool]:
         """Pin (and on miss, install) the network. ``build()`` does the actual
-        slot install and returns the slot id. Returns (entry, was_hit)."""
+        slot install and returns the slot id. Returns (entry, was_hit).
+
+        A fault fired (or raised by ``build``) before the entry is registered
+        leaves the cache byte-exact: no entry, no pin, no bytes accounted."""
+        faults.inject("cache.lookup", fingerprint=fingerprint[:12])
         key = (bucket, fingerprint)
         with obs.span("cache.lookup", cat="cache") as _sp:
             entry = self._entries.get(key)

@@ -45,6 +45,15 @@ class ServiceMetrics:
         self.n_completed = 0
         self.n_timed_out = 0
         self.n_cancelled = 0
+        # robustness outcomes (DESIGN.md §12): shed at/before admission,
+        # failed after exhausting the fallback ladder (or quarantined), plus
+        # the recovery work done on the way — retries, engine demotions,
+        # circuit-breaker trips
+        self.n_shed = 0
+        self.n_failed = 0
+        self.n_retries = 0
+        self.n_demotions = 0
+        self.n_breaker_trips = 0
         self.n_rounds = 0
         self.rows_dispatched = 0
         self.launches = 0
@@ -80,10 +89,31 @@ class ServiceMetrics:
         elif status == "timed_out":
             self.n_timed_out += 1
             obs.counter_add("service.timed_out")
+        elif status == "shed":
+            self.n_shed += 1
+            obs.counter_add("service.shed")
+        elif status == "failed":
+            self.n_failed += 1
+            obs.counter_add("service.failed")
         else:
             self.n_cancelled += 1
             obs.counter_add("service.cancelled")
         self.last_finish_t = t
+
+    def record_retry(self) -> None:
+        """One faulted request re-queued for another attempt (same engine)."""
+        self.n_retries += 1
+        obs.counter_add("service.retries")
+
+    def record_demotion(self) -> None:
+        """One request demoted a rung down the engine fallback ladder."""
+        self.n_demotions += 1
+        obs.counter_add("fallback.demotions")
+
+    def record_breaker_trip(self) -> None:
+        """One bucket's circuit breaker opened (floor raised to a fallback)."""
+        self.n_breaker_trips += 1
+        obs.counter_add("fallback.breaker_trips")
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depths.append(depth)
@@ -137,6 +167,11 @@ class ServiceMetrics:
             "completed": self.n_completed,
             "timed_out": self.n_timed_out,
             "cancelled": self.n_cancelled,
+            "shed": self.n_shed,
+            "failed": self.n_failed,
+            "retries": self.n_retries,
+            "demotions": self.n_demotions,
+            "breaker_trips": self.n_breaker_trips,
             "span_s": round(self.span_s, 4),
             "throughput_rps": round(self.throughput_rps, 3),
             "p50_ms": round(self.latency_ms(50), 3),

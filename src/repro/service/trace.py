@@ -212,6 +212,20 @@ def replay_rate_cell(
         "requests": len(requests),
         "completed": snap["completed"],
         "n_solved": sum(r.solution is not None for r in requests),
+        # robustness outcomes (all zero on a fault-free replay): every future
+        # must land in exactly one terminal bin — ``unresolved`` staying 0 is
+        # the chaos acceptance gate
+        "timed_out": snap["timed_out"],
+        "shed": snap["shed"],
+        "failed": snap["failed"],
+        "retries": snap["retries"],
+        "demotions": snap["demotions"],
+        "breaker_trips": snap["breaker_trips"],
+        "recovered": sum(
+            r.status.value == "done" and (r.retries > 0 or r.engine_level > 0)
+            for r in requests
+        ),
+        "unresolved": sum(not r.done() for r in requests),
         "wall_s": round(wall_s, 3),
         "throughput_rps": snap["throughput_rps"],
         "p50_ms": snap["p50_ms"],
@@ -249,6 +263,14 @@ def replay(
             requests.append(service.submit(events[i].build(), **submit_kwargs))
             i += 1
         if service.has_work:
+            # if the service is only waiting on fault-retry backoff gates,
+            # jump the clock to the earlier of the next gate / next arrival
+            # instead of busy-stepping through the wait
+            wake = service.next_wakeup()
+            if wake is not None:
+                if i < len(events):
+                    wake = min(wake, events[i].t)
+                clock.advance_to(wake)
             service.step()
         elif i < len(events):
             clock.advance_to(events[i].t)

@@ -1,0 +1,295 @@
+"""Robustness fabric (DESIGN.md §12): seeded fault injection, retry/fallback
+recovery, round watchdog, load shedding, and the chaos-parity acceptance —
+every future resolves under injected faults and the verdicts that ARE
+produced are bit-identical to fault-free `mac_solve`.
+"""
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import mac_solve
+from repro.problems import generate
+from repro.service import (
+    FastForwardClock,
+    InvalidRequest,
+    RequestStatus,
+    SolverService,
+    poisson_trace,
+    replay,
+)
+
+#: shortened backoffs so recovery tests run in milliseconds of trace time
+FAST = {"backoff_base_s": 0.01, "backoff_cap_s": 0.05}
+
+
+# --- plan / recipe layer ------------------------------------------------------
+
+
+def test_recipe_parsing_kinds_and_all_expansion():
+    sites = faults.parse_recipe("all:0.05")
+    assert set(sites) == set(faults.KNOWN_SITES)
+    assert all(s.rate == 0.05 and s.kind == "fault" for s in sites.values())
+    sites = faults.parse_recipe("all:0.05,round.resolve:0.2:garbage:3")
+    spec = sites["round.resolve"]  # later entries override the expansion
+    assert (spec.rate, spec.kind, spec.max_fires) == (0.2, "garbage", 3)
+    assert sites["cache.lookup"].rate == 0.05
+
+    for bad in ("", "kernel.launch", "nope.site:0.5", "cache.lookup:2.0",
+                "cache.lookup:0.5:weird", "cache.lookup:0.5:fault:-1"):
+        with pytest.raises(ValueError):
+            faults.parse_recipe(bad)
+
+
+def test_plan_is_deterministic_and_streams_are_independent():
+    """Whether the k-th crossing of a site fires is a pure function of
+    (recipe, seed, k) — other sites' traffic must not perturb it."""
+    def fire_pattern(interleave: bool):
+        plan = faults.FaultPlan(faults.parse_recipe("all:0.3"), seed=7)
+        out = []
+        for k in range(50):
+            if interleave:  # extra traffic on a DIFFERENT site
+                plan.roll("cache.lookup")
+            out.append(plan.roll("kernel.launch"))
+        return out
+
+    assert fire_pattern(False) == fire_pattern(True)
+    assert any(k is not None for k in fire_pattern(False))
+
+
+def test_max_fires_bounds_fires_but_still_advances_the_stream():
+    bounded = faults.FaultPlan({"slot.install": faults.SiteSpec(1.0, "oom", 2)})
+    free = faults.FaultPlan({"slot.install": faults.SiteSpec(1.0, "oom")})
+    b = [bounded.roll("slot.install") for _ in range(5)]
+    f = [free.roll("slot.install") for _ in range(5)]
+    assert b == ["oom", "oom", None, None, None]
+    assert f == ["oom"] * 5
+    assert bounded.fires["slot.install"] == 2
+    assert bounded.draws["slot.install"] == 5  # draws never stop
+
+
+def test_off_by_default_and_injected_scope_restores():
+    assert not faults.enabled()
+    faults.inject("kernel.launch")  # no plan: must be a silent no-op
+    with faults.injected("cache.lookup:1.0:stale") as plan:
+        assert faults.enabled() and faults.active() is plan
+        with pytest.raises(faults.StaleSchedule) as ei:
+            faults.inject("cache.lookup", fingerprint="abc")
+        assert ei.value.site == "cache.lookup"
+        assert "abc" in str(ei.value)
+    assert not faults.enabled()
+
+
+def test_typed_exception_hierarchy():
+    assert issubclass(faults.OomError, MemoryError)
+    for exc in (faults.InjectedFault, faults.GarbageVerdict,
+                faults.StaleSchedule, faults.OomError):
+        assert issubclass(exc, faults.FaultError)
+    # Overloaded is a client verdict, NOT a retryable fault
+    assert not issubclass(faults.Overloaded, faults.FaultError)
+    assert faults.Overloaded(1.5).retry_after_s == 1.5
+
+
+# --- submit validation --------------------------------------------------------
+
+
+def test_submit_validation_rejects_garbage_eagerly():
+    svc = SolverService(engine="einsum")
+    good = generate("nqueens", n=8)
+
+    class Junk:
+        dom = np.ones((4, 3), bool)
+
+    junk = Junk()
+    junk.dom = np.ones(7, bool)  # not 2-D
+    with pytest.raises(InvalidRequest):
+        svc.submit(junk)
+    with pytest.raises(InvalidRequest):
+        svc.submit(good, deadline_s=float("inf"))
+    with pytest.raises(InvalidRequest):
+        svc.submit(good, deadline_s=-1.0)
+    with pytest.raises(InvalidRequest):
+        svc.submit(good, max_assignments=0)
+    # the service is still healthy after rejecting garbage
+    req = svc.submit(good)
+    sol, _ = req.result()
+    assert sol is not None
+
+
+# --- load shedding ------------------------------------------------------------
+
+
+def test_queue_depth_shed_returns_typed_overloaded():
+    clock = FastForwardClock()
+    svc = SolverService(engine="einsum", clock=clock, shed_queue_depth=2)
+    csps = [generate("nqueens", n=8, seed=(0, i)) for i in range(6)]
+    reqs = [svc.submit(c) for c in csps]
+    shed = [r for r in reqs if r.status is RequestStatus.SHED]
+    kept = [r for r in reqs if r.status is not RequestStatus.SHED]
+    assert shed and len(kept) >= 2  # the burst beyond the bound was refused
+    for r in shed:
+        assert isinstance(r.error, faults.Overloaded)
+        assert r.error.retry_after_s > 0  # the Retry-After hint
+        assert r.done() and r.solution is None
+    svc.run_until_idle()
+    assert all(r.status is RequestStatus.DONE for r in kept)
+    assert svc.snapshot()["shed"] == len(shed)
+
+
+# --- round watchdog -----------------------------------------------------------
+
+
+def test_watchdog_recurrence_bound_quarantines_as_failed():
+    svc = SolverService(engine="einsum", round_recurrences=1)
+    req = svc.submit(generate("model_rb", n=10, hardness=1.0, seed=(5, 0)))
+    sol, stats = req.result()
+    assert req.status is RequestStatus.FAILED
+    assert isinstance(req.error, faults.FaultError)
+    assert req.error.site == "round.watchdog"
+    assert "recurrence depth" in str(req.error)
+    snap = svc.snapshot()
+    assert snap["failed"] == 1
+    # quarantine freed the request's rows and pins mid-flight
+    for b in snap["buckets"].values():
+        assert b["active"] == 0
+    assert all(e.pins == 0 for e in svc.cache._entries.values())
+
+
+def test_watchdog_bounds_validated():
+    with pytest.raises(ValueError):
+        SolverService(engine="einsum", round_wall_s=0.0)
+    with pytest.raises(ValueError):
+        SolverService(engine="einsum", round_recurrences=0)
+
+
+# --- fallback ladder ----------------------------------------------------------
+
+
+def test_demotion_to_success_keeps_verdicts_correct():
+    """retry_cap=0 + bounded kernel faults: every faulted request demotes down
+    the ladder (full -> einsum) and still lands the fault-free verdict."""
+    csps = [generate("model_rb", n=10, hardness=1.0, seed=(3, i))
+            for i in range(4)]
+    with faults.injected("kernel.launch:1.0:oom:1", seed=1):
+        svc = SolverService(engine="full", retry_cap=0, **FAST)
+        reqs = [svc.submit(c) for c in csps]
+        svc.run_until_idle()
+    snap = svc.snapshot()
+    assert snap["demotions"] > 0
+    assert snap["failed"] == 0 and snap["shed"] == 0
+    assert "einsum" in snap["engine_ladder"]
+    for req, csp in zip(reqs, csps):
+        assert req.status is RequestStatus.DONE
+        ref_sol, _ = mac_solve(csp, engine="einsum")
+        assert req.solution == ref_sol
+
+
+def test_breaker_trips_floor_the_bucket():
+    """K consecutive faulted rounds on one bucket trip its circuit breaker:
+    later admissions of that bucket start at the demoted level directly."""
+    csp = generate("model_rb", n=10, hardness=1.0, seed=(9, 0))
+    with faults.injected("round.resolve:1.0:garbage:4", seed=0):
+        svc = SolverService(engine="full", retry_cap=8, breaker_threshold=2,
+                            **FAST)
+        req = svc.submit(csp)
+        req.result()
+    snap = svc.snapshot()
+    assert snap["breaker_trips"] >= 1
+    assert snap["bucket_floor"]  # the offending bucket is floored
+    assert req.status is RequestStatus.DONE
+    assert req.solution == mac_solve(csp, engine="einsum")[0]
+
+
+# --- chaos parity (the acceptance gate) ---------------------------------------
+
+
+def _oracle(events):
+    return [mac_solve(ev.build(), engine="einsum") for ev in events]
+
+
+def test_chaos_parity_every_site_five_percent():
+    """The ISSUE acceptance: a poisson_mixed replay with EVERY site injecting
+    at 5% resolves 100% of its futures, and every DONE verdict (solution AND
+    search stats) is bit-identical to fault-free sequential mac_solve."""
+    events = poisson_trace(["model_rb", "coloring_random"], rate=12.0,
+                           duration=3.0, seed=0)
+    oracle = _oracle(events)
+    with faults.injected("all:0.05", seed=0) as plan:
+        clock = FastForwardClock()
+        svc = SolverService(engine="einsum", clock=clock, retry_cap=3, **FAST)
+        reqs = replay(svc, events, clock)
+    assert plan.total_fires > 0  # the drill actually injected
+    assert all(r.done() for r in reqs)  # liveness: no future left behind
+    n_done = 0
+    for req, (ref_sol, ref_st) in zip(reqs, oracle):
+        if req.status is not RequestStatus.DONE:
+            assert req.status is RequestStatus.FAILED  # no shed/deadline here
+            assert isinstance(req.error, faults.FaultError)
+            continue
+        n_done += 1
+        assert req.solution == ref_sol
+        assert req.stats.n_assignments == ref_st.n_assignments
+        assert req.stats.n_backtracks == ref_st.n_backtracks
+        assert req.stats.recurrences == ref_st.recurrences
+        assert req.stats.revisions == ref_st.revisions
+    assert n_done > len(reqs) // 2  # recovery carried the bulk to verdicts
+    # drained clean: no in-flight searches, no leaked cache pins (resident
+    # prepared networks legitimately keep occupying slots — that's the LRU)
+    for b in svc.snapshot()["buckets"].values():
+        assert b["active"] == 0
+    assert all(e.pins == 0 for e in svc.cache._entries.values())
+
+
+@pytest.mark.parametrize("site", faults.KNOWN_SITES)
+def test_single_site_chaos_parity(site):
+    """Each site alone at a high rate (bounded fires): the recovery path for
+    that specific boundary must preserve verdict parity."""
+    events = poisson_trace(["model_rb"], rate=8.0, duration=1.5, seed=2)
+    oracle = _oracle(events)
+    with faults.injected(f"{site}:0.5:fault:3", seed=3):
+        clock = FastForwardClock()
+        svc = SolverService(engine="einsum", clock=clock, retry_cap=4, **FAST)
+        reqs = replay(svc, events, clock)
+    assert all(r.done() for r in reqs)
+    for req, (ref_sol, ref_st) in zip(reqs, oracle):
+        assert req.status is RequestStatus.DONE, (site, req.status, req.error)
+        assert req.solution == ref_sol
+        assert req.stats.recurrences == ref_st.recurrences
+
+
+@pytest.mark.pallas
+def test_device_frontier_chaos_frees_all_rows():
+    """Faults on the device-resident frontier path (FrontierTable): recovery
+    plus the fallback ladder must return every frontier row — rows_live back
+    to 0 on every device table once the replay drains."""
+    events = poisson_trace(["model_rb"], rate=6.0, duration=1.5, seed=6)
+    oracle = _oracle(events)
+    with faults.injected("frontier.step:0.3:fault:2,kernel.launch:0.3:oom:2",
+                         seed=7):
+        clock = FastForwardClock()
+        svc = SolverService(engine="pallas_packed", clock=clock, retry_cap=4,
+                            **FAST)
+        reqs = replay(svc, events, clock)
+    assert all(r.done() for r in reqs)
+    for req, (ref_sol, _) in zip(reqs, oracle):
+        if req.status is RequestStatus.DONE:
+            assert req.solution == ref_sol
+    for b in svc.snapshot()["buckets"].values():
+        assert b["active"] == 0
+        if b.get("device_frontier"):
+            assert b["frontier_rows_live"] == 0
+    assert all(e.pins == 0 for e in svc.cache._entries.values())
+
+
+def test_garbage_and_oom_kinds_recover_like_faults():
+    events = poisson_trace(["model_rb"], rate=8.0, duration=1.5, seed=4)
+    oracle = _oracle(events)
+    recipe = "round.resolve:0.3:garbage:2,slot.install:0.3:oom:2"
+    with faults.injected(recipe, seed=5):
+        clock = FastForwardClock()
+        svc = SolverService(engine="einsum", clock=clock, retry_cap=4, **FAST)
+        reqs = replay(svc, events, clock)
+    assert all(r.done() for r in reqs)
+    for req, (ref_sol, _) in zip(reqs, oracle):
+        assert req.status is RequestStatus.DONE
+        assert req.solution == ref_sol

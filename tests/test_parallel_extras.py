@@ -1,17 +1,12 @@
-"""Extended coverage: HLO collective parser, elastic checkpoint restore,
-gradient compression, sharding-rule demotions, dry-run artifact schema,
+"""Extended coverage: HLO collective parser, sharding-rule demotions,
 sudoku end-to-end."""
 
-import json
 import subprocess
 import sys
 import textwrap
-from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.parallel.hlo_stats import collective_stats, total_wire_bytes
 from repro.parallel.sharding import DEFAULT_PARAM_RULES, spec_for
@@ -112,135 +107,6 @@ def test_cache_seq_takes_data_only_when_batch_cannot():
         mesh_shape,
     )
     assert s[1] is None and s[2] == ("model", "data")
-
-
-# --------------------------- elastic checkpoint restore ----------------------
-
-
-def test_checkpoint_restores_across_meshes_subprocess(tmp_path):
-    code = textwrap.dedent(
-        f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-        import sys; sys.path.insert(0, "src")
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.checkpoint.manager import CheckpointManager
-        from repro.launch.mesh import make_mesh
-
-        tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-        mgr = CheckpointManager(r"{tmp_path}")
-        # save sharded on mesh A (4-way data)
-        mesh_a = make_mesh((4, 1), ("data", "model"))
-        tree_a = jax.device_put(tree, NamedSharding(mesh_a, P("data", None)))
-        mgr.save(1, tree_a)
-        # restore sharded on mesh B (4-way model, other dim)
-        mesh_b = make_mesh((1, 4), ("data", "model"))
-        sh = {{"w": NamedSharding(mesh_b, P(None, "model"))}}
-        out = mgr.restore(1, tree, shardings=sh)
-        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
-        assert out["w"].sharding.spec == P(None, "model")
-        print("ELASTIC_OK")
-        """
-    )
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        cwd="/root/repo", timeout=300,
-    )
-    assert "ELASTIC_OK" in out.stdout, out.stderr[-1500:]
-
-
-# --------------------------- gradient compression ----------------------------
-
-
-def test_quantize_roundtrip_error_bounded():
-    from repro.optim.compression import dequantize, quantize_int8
-
-    x = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 3.0
-    qt = quantize_int8(x)
-    err = jnp.max(jnp.abs(dequantize(qt) - x))
-    assert float(err) <= float(qt.scale) / 2 + 1e-6
-
-
-def test_error_feedback_accumulates_lost_mass():
-    from repro.optim.compression import compress_decompress, init_error_feedback
-
-    g = {"w": jnp.full((64,), 1e-4)}  # tiny vs scale -> quantizes to 0 at first
-    ef = init_error_feedback(g)
-    total = jnp.zeros((64,))
-    for _ in range(10):
-        dq, ef, _ = compress_decompress(g, ef)
-        total = total + dq["w"]
-    # with EF, the running sum tracks the true sum (10 * 1e-4)
-    np.testing.assert_allclose(np.asarray(total), 1e-3, rtol=0.3)
-
-
-def test_compressed_psum_matches_f32_psum_subprocess():
-    code = textwrap.dedent(
-        """
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-        import sys; sys.path.insert(0, "src")
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-        from repro.launch.mesh import make_mesh
-        from repro.optim.compression import compressed_psum
-
-        mesh = make_mesh((4,), ("pod",))
-        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
-
-        def f(xs):
-            exact = jax.lax.psum(xs, "pod")
-            approx = compressed_psum(xs, "pod")
-            return exact, approx
-
-        exact, approx = jax.jit(
-            shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=(P("pod"), P("pod")),
-                      check_rep=False)
-        )(x)
-        rel = np.max(np.abs(np.asarray(exact) - np.asarray(approx))) / (
-            np.max(np.abs(np.asarray(exact))) + 1e-9)
-        assert rel < 0.05, rel
-        print("PSUM_OK")
-        """
-    )
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True,
-        cwd="/root/repo", timeout=300,
-    )
-    assert "PSUM_OK" in out.stdout, out.stderr[-1500:]
-
-
-# --------------------------- dry-run artifact schema --------------------------
-
-ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
-
-
-@pytest.mark.skipif(not ART.exists(), reason="dry-run artifacts not generated")
-def test_dryrun_artifacts_cover_all_live_cells():
-    from repro.configs import cells
-
-    expected = {(a, s.name, m) for a, s, _ in cells() for m in ("single", "multi")}
-    have = set()
-    for f in ART.glob("*.json"):
-        rec = json.loads(f.read_text())
-        if "arch" in rec:
-            have.add((rec["arch"], rec["shape"], rec["mesh"]))
-    missing = expected - have
-    assert not missing, f"missing {len(missing)} cells: {sorted(missing)[:5]}"
-
-
-@pytest.mark.skipif(not ART.exists(), reason="dry-run artifacts not generated")
-def test_dryrun_artifacts_have_roofline_fields():
-    for f in list(ART.glob("*.json"))[:10]:
-        rec = json.loads(f.read_text())
-        if "arch" not in rec:
-            continue
-        e = rec["cost_extrapolated"]
-        assert e["flops"] > 0, f.name
-        assert e["bytes"] > 0, f.name
-        assert "memory_analysis" in rec and "temp_size_in_bytes" in rec["memory_analysis"]
 
 
 # --------------------------- sudoku ------------------------------------------
